@@ -1,0 +1,275 @@
+"""One benchmark per paper table/figure (Keuper & Pfreundt 2015).
+
+Scaled to CPU-host size: the paper's ~1TB synthetic set becomes m=200k
+samples (same k/d as the paper's k=10, d=10 headline experiments); worker
+counts sweep 4..32 instead of 64..1024. Relative behaviour — which method
+needs fewer samples to a given error, how overheads scale — is preserved;
+absolute wall-clock is 'modeled' per benchmarks/common.py.
+
+Figure map:
+  fig5_strong_scaling     — strong scaling, synthetic k=10 d=10 (+ Fig 1/6)
+  fig7_scaling_k          — runtime vs number of clusters k
+  fig8_convergence        — error vs touched samples, 3 methods
+  fig9_10_final_error     — final error mean + variance, 10-fold
+  fig11_comm_cost         — ASGD update overhead vs comm frequency 1/b
+  fig12_messages          — sent/received/good messages per worker
+  fig13_comm_frequency    — convergence at b=500 vs b=100000
+  fig14_15_silent         — ASGD vs silent ASGD vs SGD convergence
+  fig16_17_aggregation    — return-first vs MapReduce-aggregate
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans
+from repro.core.asgd import ASGDConfig
+from repro.core.baselines import (RoundSimConfig, run_batch, shard_data,
+                                  simulate_rounds)
+
+from .common import (CPU_SCALE, emit, iters_to_error, t_comm_asgd,
+                     t_comm_batch, t_comm_sgd, time_jax)
+
+K, D, M = 10, 10, 200_000
+B = 500  # paper's choice (Fig. 11)
+
+
+@functools.lru_cache(maxsize=None)
+def _data(seed=0, k=K, d=D, m=M):
+    x, centers, _ = kmeans.synthetic_clusters(
+        jax.random.key(seed), k=k, d=d, m=m, spread=0.12)
+    w0 = kmeans.init_prototypes(jax.random.key(seed + 1), x, k)
+    return x, centers, w0
+
+
+def _run(workers, rounds, b=B, silent=False, delay=1, seed=0, k=K, d=D,
+         eps=0.1, m=M):
+    x, centers, w0 = _data(seed=0, k=k, d=d, m=m)
+    shards = shard_data(jax.random.key(seed + 2), x, workers)
+    cfg = RoundSimConfig(
+        workers=workers, rounds=rounds, delay=delay,
+        asgd=ASGDConfig(eps=eps, batch=b, silent=silent))
+    out = simulate_rounds(jax.random.key(seed + 3), shards, w0, cfg)
+    out["gt_error"] = kmeans.ground_truth_error(
+        jax.tree.map(lambda w: w[0], out["w"]), centers)
+    return out
+
+
+def _grad_us_per_sample(b=B, k=K, d=D):
+    """Measured per-sample mini-batch gradient cost on this host."""
+    x, _, w0 = _data(k=k, d=d)
+    f = jax.jit(lambda xb, w: kmeans.minibatch_delta(xb, w))
+    us = time_jax(f, x[:b], w0)
+    return us / b
+
+
+# ---------------------------------------------------------------------------
+
+def fig5_strong_scaling():
+    """Strong scaling: constant data + global iterations, workers grow.
+    Reports measured rounds-to-error and modeled wall-clock per method."""
+    x, centers, w0 = _data()
+    state_bytes = w0.size * 4
+    grad_us = _grad_us_per_sample() / CPU_SCALE
+    target = None
+    total_samples = 1_600_000  # global sample budget (I in the paper)
+    for workers in (4, 8, 16, 32):
+        rounds = max(1, total_samples // (workers * B))
+        out = _run(workers, rounds)
+        out_s = _run(workers, rounds, silent=True)
+        if target is None:  # error level every config must reach
+            target = float(out["errors"][-1]) * 1.10
+        it_a = iters_to_error(out["errors"], target)
+        it_s = iters_to_error(out_s["errors"], target)
+        # modeled wall-clock to target (per-round cost x rounds-to-target)
+        t_round_grad = B * grad_us * 1e-6
+        wall_a = it_a * (t_round_grad + t_comm_asgd(state_bytes))
+        wall_s = it_s * (t_round_grad + t_comm_sgd())
+        # BATCH: full pass per iteration over the worker's shard
+        x_np = x
+        _, errs_b = run_batch(x_np, w0, eps=1.0,
+                              iters=min(60, max(10, rounds // 4)))
+        it_b = iters_to_error(np.asarray(errs_b), target)
+        wall_b = it_b * ((x.shape[0] // workers) * grad_us * 1e-6
+                         + t_comm_batch(state_bytes, workers))
+        emit(f"fig5/asgd/workers={workers}", wall_a * 1e6,
+             f"rounds_to_err={it_a};modeled_s={wall_a:.4f}")
+        emit(f"fig5/sgd/workers={workers}", wall_s * 1e6,
+             f"rounds_to_err={it_s};modeled_s={wall_s:.4f}")
+        emit(f"fig5/batch/workers={workers}", wall_b * 1e6,
+             f"iters_to_err={it_b};modeled_s={wall_b:.4f}")
+
+
+def fig7_scaling_k():
+    """Scaling in the number of clusters k (paper: better than O(log k);
+    ASGD fastest but slightly worse slope due to sparsity needs)."""
+    for k in (10, 50, 100):
+        x, centers, w0 = _data(k=k, d=D, m=M // 2)
+        shards = shard_data(jax.random.key(1), x, 8)
+        cfg = RoundSimConfig(workers=8, rounds=60,
+                             asgd=ASGDConfig(eps=0.1, batch=B))
+        f = jax.jit(lambda key, sh, w: simulate_rounds(key, sh, w, cfg)["errors"])
+        us = time_jax(f, jax.random.key(2), shards, w0, iters=3, warmup=1)
+        emit(f"fig7/asgd/k={k}", us / 60, f"us_per_round_measured")
+
+
+def _run_async(workers, rounds, b=100, eps=0.1, silent=False, seed=0,
+               k=K, d=D, m=M // 4, partial=1.0):
+    """Paper-faithful threaded GASPI-semantics run (DESIGN.md §2.1).
+
+    The convergence claims (C1/C6) depend on genuine asynchrony: fast ranks
+    are genuinely AHEAD in iteration count, the Parzen gate admits exactly
+    those states, and stragglers get pulled forward. A bulk-synchronous
+    round simulation cannot show this (all workers share an iteration
+    clock) — measured, see EXPERIMENTS.md §Paper-claims."""
+    from repro.core.async_sim import AsyncSimConfig, run_async_asgd
+
+    x, centers, w0 = _data(seed=0, k=k, d=d, m=m)
+    cfg = AsyncSimConfig(
+        ranks=workers, rounds=rounds, partial_fraction=partial,
+        asgd=ASGDConfig(eps=eps, batch=b, silent=silent))
+    out = run_async_asgd(cfg, np.asarray(x, np.float64),
+                         np.asarray(w0, np.float64), seed=seed)
+    return out
+
+
+def fig8_convergence():
+    """Convergence vs touched samples (the paper's headline Fig. 8):
+    ASGD reaches a fixed error with substantially fewer samples. Uses the
+    threaded simulator — the claim is driven by real asynchrony."""
+    rounds, b, ranks = 200, 100, 12
+    out = _run_async(ranks, rounds, b=b, k=K)
+    out_s = _run_async(ranks, rounds, b=b, k=K, silent=True)
+    x, centers, w0 = _data(k=K, d=D, m=M // 4)
+    _, errs_b = run_batch(x, w0, eps=1.0, iters=50)
+    # error level: what silent reaches at the end (both eventually tie)
+    trace = np.mean(np.asarray(out["err_trace"]), axis=0)     # every 10 rds
+    trace_s = np.mean(np.asarray(out_s["err_trace"]), axis=0)
+    target = float(trace_s[-1]) * 1.02
+    it_a = iters_to_error(trace, target) * 10
+    it_s = iters_to_error(trace_s, target) * 10
+    it_b = iters_to_error(np.asarray(errs_b), target)
+    samples_a = it_a * ranks * b
+    samples_s = it_s * ranks * b
+    samples_b = it_b * (M // 4)
+    emit("fig8/asgd", samples_a,
+         f"samples_to_err={samples_a};err={target:.4f}")
+    emit("fig8/sgd", samples_s,
+         f"samples_to_err={samples_s};speedup_vs_asgd="
+         f"{samples_s/max(1,samples_a):.2f}x")
+    emit("fig8/batch", samples_b,
+         f"samples_to_err={samples_b};speedup_vs_asgd="
+         f"{samples_b/max(1,samples_a):.2f}x")
+
+
+def fig9_10_final_error():
+    """Final error mean and variance over 10 folds (stability claim C3) —
+    threaded simulator (the claim is about the non-deterministic spread
+    of real asynchronous runs)."""
+    errs_a, errs_s, errs_b = [], [], []
+    x, centers, w0 = _data(m=M // 4)
+    for fold in range(10):
+        out = _run_async(8, 250, seed=100 + fold)
+        out_s = _run_async(8, 250, seed=100 + fold, silent=True)
+        errs_a.append(out["error_first"])
+        errs_s.append(out_s["error_first"])
+    _, eb = run_batch(x, w0, eps=1.0, iters=40)
+    errs_b.append(float(eb[-1]))
+    emit("fig9/asgd_final_err", float(np.mean(errs_a)),
+         f"var={np.var(errs_a):.2e}")
+    emit("fig9/sgd_final_err", float(np.mean(errs_s)),
+         f"var={np.var(errs_s):.2e}")
+    emit("fig9/batch_final_err", float(np.mean(errs_b)), "")
+    emit("fig10/variance_ratio_sgd_over_asgd",
+         float(np.var(errs_s) / max(np.var(errs_a), 1e-12)),
+         "paper: ASGD more stable (ratio>1 confirms)")
+
+
+def fig11_comm_cost():
+    """Measured per-round cost of the ASGD update vs silent updates at
+    different communication frequencies 1/b (paper: <=3% below bandwidth
+    saturation; saturation is a network property we cannot reproduce —
+    we measure the *update arithmetic* overhead)."""
+    x, _, w0 = _data()
+    shards = shard_data(jax.random.key(1), x, 8)
+    for b in (100, 500, 2000):
+        mk = lambda silent: RoundSimConfig(
+            workers=8, rounds=20, asgd=ASGDConfig(eps=0.1, batch=b,
+                                                  silent=silent))
+        fa = jax.jit(lambda k, s, w, c=mk(False): simulate_rounds(
+            k, s, w, c)["errors"])
+        fs = jax.jit(lambda k, s, w, c=mk(True): simulate_rounds(
+            k, s, w, c)["errors"])
+        ua = time_jax(fa, jax.random.key(2), shards, w0, iters=5)
+        us = time_jax(fs, jax.random.key(2), shards, w0, iters=5)
+        emit(f"fig11/overhead/b={b}", (ua - us) / 20,
+             f"overhead_pct={100.0 * (ua - us) / us:.1f}")
+
+
+def fig12_messages():
+    """Messages sent vs admitted ('good') while scaling ranks — threaded
+    sim (the paper plots per-CPU sent/received/good rates)."""
+    for workers in (4, 8, 16):
+        out = _run_async(workers, 120)
+        sent = int(out["msgs_sent"].sum())
+        good = int(out["msgs_good"].sum())
+        emit(f"fig12/workers={workers}", 100.0 * good / max(1, sent),
+             f"sent_per_rank={sent // workers};good_per_rank="
+             f"{good // workers}")
+
+
+def fig13_comm_frequency():
+    """Convergence at communication every mini-batch (b=100) vs a 20x lower
+    message rate (paper: low frequency moves toward SimuParallelSGD)."""
+    out_hi = _run_async(12, 200, b=100)
+    out_lo = _run_async(12, 200, b=100, partial=1.0, seed=0)
+    # low frequency: re-run with fanout emulated by silent + occasional send
+    from repro.core.async_sim import AsyncSimConfig, run_async_asgd
+    x, _, w0 = _data(m=M // 4)
+    cfg_lo = AsyncSimConfig(ranks=12, rounds=200, fanout=1, n_buffers=1,
+                            asgd=ASGDConfig(eps=0.1, batch=2000))
+    out_lo = run_async_asgd(cfg_lo, np.asarray(x, np.float64),
+                            np.asarray(w0, np.float64), seed=0)
+    tr_hi = np.mean(np.asarray(out_hi["err_trace"]), axis=0)
+    tr_lo = np.mean(np.asarray(out_lo["err_trace"]), axis=0)
+    target = float(tr_hi[-1]) * 1.05
+    emit("fig13/freq=1/100", iters_to_error(tr_hi, target) * 10,
+         "rounds_to_err")
+    emit("fig13/freq=1/2000",
+         iters_to_error(tr_lo, target) * 10 * (2000 // 100),
+         "samples-normalized rounds (moves toward SimuParallelSGD)")
+
+
+def fig14_15_silent():
+    """ASGD vs silent-mode ASGD: the asynchronous communication, not the
+    mini-batching, drives early convergence (claim C6). Threaded sim."""
+    out = _run_async(12, 200)
+    out_s = _run_async(12, 200, silent=True)
+    tr = np.mean(np.asarray(out["err_trace"]), axis=0)
+    tr_s = np.mean(np.asarray(out_s["err_trace"]), axis=0)
+    target = float(tr_s[-1]) * 1.05
+    it = iters_to_error(tr, target) * 10
+    it_s = iters_to_error(tr_s, target) * 10
+    emit("fig14/asgd_rounds_to_err", it, f"err_level={target:.4f}")
+    emit("fig14/silent_rounds_to_err", it_s,
+         f"speedup={it_s / max(1, it):.2f}x")
+    emit("fig15/auc_asgd_over_silent", float(tr.mean() / tr_s.mean()),
+         "mean-error ratio over the run (<1: ASGD converges earlier)")
+
+
+def fig16_17_aggregation():
+    """Return-first-worker vs final MapReduce aggregation (claim C5)."""
+    out = _run_async(12, 200)
+    e_first = out["error_first"]
+    e_mean = out["error_mean_aggregate"]
+    emit("fig16/error_first", e_first, "")
+    emit("fig16/error_aggregated", e_mean,
+         f"rel_diff_pct={100 * abs(e_first - e_mean) / e_mean:.2f}")
+
+
+ALL = [fig5_strong_scaling, fig7_scaling_k, fig8_convergence,
+       fig9_10_final_error, fig11_comm_cost, fig12_messages,
+       fig13_comm_frequency, fig14_15_silent, fig16_17_aggregation]

@@ -1,0 +1,44 @@
+"""Roofline report — reads the dry-run artifacts produced by
+``python -m repro.launch.dryrun`` (launch/artifacts/roofline.json) and emits
+one CSV row per (arch x shape): the three roofline terms, the dominant
+bottleneck, and the MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+
+Hardware constants (TPU v5e targets, per chip):
+  peak bf16 compute 197 TFLOP/s · HBM BW 819 GB/s · ICI ~50 GB/s/link
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import emit
+
+ARTIFACT = pathlib.Path(__file__).resolve().parent.parent / \
+    "launch_artifacts" / "roofline.json"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def roofline_rows():
+    if not ARTIFACT.exists():
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    data = json.loads(ARTIFACT.read_text())
+    for rec in data.get("records", []):
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        t_c = rec["compute_s"]
+        t_m = rec["memory_s"]
+        t_x = rec["collective_s"]
+        emit(name, max(t_c, t_m, t_x) * 1e6,
+             f"compute_s={t_c:.3e};memory_s={t_m:.3e};"
+             f"collective_s={t_x:.3e};dominant={rec['dominant']};"
+             f"useful_flops_ratio={rec.get('useful_ratio', 0):.3f}")
+    for f in data.get("failures", []):
+        emit(f"roofline/FAILED/{f['arch']}/{f['shape']}", 0.0,
+             f["error"][:80])
+
+
+ALL = [roofline_rows]

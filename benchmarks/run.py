@@ -1,0 +1,47 @@
+"""Benchmark harness entry point.
+
+One function per paper table/figure (benchmarks/paper_figs.py) plus the
+SPMD-step microbenchmarks (benchmarks/spmd_step.py). Roofline terms for the
+assigned architectures come from the dry-run artifacts and are reported by
+benchmarks/roofline_report.py (reads launch/dryrun JSON output).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig8 spmd  # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+
+    from . import paper_figs, roofline_report, spmd_step, stragglers
+    groups = []
+    groups += [(f.__name__, f) for f in paper_figs.ALL]
+    groups += [(f.__name__, f) for f in spmd_step.ALL]
+    groups += [(f.__name__, f) for f in stragglers.ALL]
+    groups += [(f.__name__, f) for f in roofline_report.ALL]
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in groups:
+        if filters and not any(f in name for f in filters):
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at end
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    if failures:
+        for name, err in failures:
+            print(f"FAILED,{name},{err}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

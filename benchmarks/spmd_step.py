@@ -1,0 +1,81 @@
+"""Microbenchmarks of the SPMD ASGD round vs the baseline update rules.
+
+Measures the *update arithmetic* cost on this host (1 device — collectives
+become local rolls; their byte cost is covered by the roofline report) and
+derives the per-step collective-byte comparison analytically:
+
+  BATCH    all-reduce:        2 * |w| bytes per worker per step
+  ASGD     gossip (1/p):      |w| / p bytes, point-to-point
+  SimuParallelSGD:            0 bytes
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.asgd import ASGDConfig
+from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
+                               init_gossip_state, local_sgd_apply,
+                               sync_dp_apply)
+
+from .common import emit, time_jax
+
+
+def _params(W=4, n_mb=8):
+    """~n_mb MiB of f32 params per worker across a few leaves."""
+    n = n_mb * (1 << 20) // 4
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    return {
+        "emb": jax.random.normal(k1, (W, n // 2 // 1024, 1024)),
+        "ffw": jax.random.normal(k2, (W, n // 4 // 512, 512)),
+        "out": jax.random.normal(k3, (W, n // 4 // 256, 256)),
+    }
+
+
+def spmd_step_cost():
+    W = 4
+    params = _params(W)
+    grads = jax.tree.map(lambda x: 0.01 * x, params)
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(params)) // W
+    acfg = ASGDConfig(eps=0.05)
+
+    for p in (1, 4, 16):
+        gcfg = GossipConfig(shifts=(1, 2, 4), partial_blocks=min(p, 3),
+                            partial_mode="leaves", delay=1)
+        state = init_gossip_state(params, gcfg)
+        f = jax.jit(lambda pr, g, s, k: asgd_gossip_apply(
+            pr, g, s, k, gcfg, acfg)[0])
+        us = time_jax(f, params, grads, state, jax.random.key(1))
+        emit(f"spmd/asgd_step/p={p}", us,
+             f"collective_bytes={nbytes // p}")
+
+    f_sync = jax.jit(lambda pr, g: sync_dp_apply(pr, g, 0.05))
+    us = time_jax(f_sync, params, grads)
+    emit("spmd/sync_dp_step", us, f"collective_bytes={2 * nbytes}")
+
+    f_local = jax.jit(lambda pr, g: local_sgd_apply(pr, g, 0.05))
+    us = time_jax(f_local, params, grads)
+    emit("spmd/local_sgd_step", us, "collective_bytes=0")
+
+
+def gossip_overhead_pct():
+    """ASGD arithmetic overhead over plain local SGD (the paper's Fig. 11
+    'communication cost' has an arithmetic component — the Parzen gate —
+    measured here; O(|w|/b) per the paper §4.1)."""
+    W = 4
+    params = _params(W)
+    grads = jax.tree.map(lambda x: 0.01 * x, params)
+    acfg = ASGDConfig(eps=0.05)
+    gcfg = GossipConfig(shifts=(1, 2), partial_blocks=4,
+                        partial_mode="leaves", delay=1)
+    state = init_gossip_state(params, gcfg)
+    f_a = jax.jit(lambda pr, g, s, k: asgd_gossip_apply(
+        pr, g, s, k, gcfg, acfg)[0])
+    f_l = jax.jit(lambda pr, g: local_sgd_apply(pr, g, 0.05))
+    ua = time_jax(f_a, params, grads, state, jax.random.key(1))
+    ul = time_jax(f_l, params, grads)
+    emit("spmd/gossip_overhead", ua - ul,
+         f"overhead_pct={100 * (ua - ul) / ul:.1f}")
+
+
+ALL = [spmd_step_cost, gossip_overhead_pct]

@@ -1,0 +1,26 @@
+"""Serving example: batched prefill + greedy decode across architecture
+families (dense / MoE / SSM / hybrid / enc-dec / VLM) using the same
+public API the dry-run lowers at 32k/500k context.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main as serve_main
+
+ARCHS = [
+    "smollm-135m",          # dense
+    "granite-moe-1b-a400m", # MoE top-8
+    "mamba2-370m",          # SSM (O(1) decode state)
+    "recurrentgemma-9b",    # hybrid RG-LRU
+    "whisper-tiny",         # enc-dec audio (stub frontend)
+    "paligemma-3b",         # VLM (stub SigLIP prefix)
+]
+
+
+def main():
+    for arch in ARCHS:
+        serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "16", "--new-tokens", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""msgpack-based pytree checkpointing (no orbax dependency).
+
+Supports the paper's early-termination workflow (§1: "computation can be
+stopped at any time and continued later"): ASGD's w_0 "could be initialized
+with the preliminary results of a previously early terminated optimization
+run" — save/restore round-trips the full train state (params incl. the
+worker axis, optimizer state, gossip staleness buffer, step counter).
+
+Format: msgpack map {treedef_repr, leaves: [{dtype, shape, data}...]}.
+Arrays are serialized raw (C-order); bfloat16 goes through uint16 views.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(x)
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(d):
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(raw.view(jnp.bfloat16))
+    raw = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(raw)
+
+
+def save_checkpoint(path, tree) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_encode_leaf(x) for x in leaves],
+    }
+    tmp = path.with_suffix(".tmp")
+    tmp.write_bytes(msgpack.packb(payload, use_bin_type=True))
+    tmp.rename(path)  # atomic publish
+
+
+def load_checkpoint(path, like):
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    if len(payload["leaves"]) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(payload['leaves'])} leaves, "
+            f"expected {len(leaves)}")
+    out = []
+    for got, want in zip(payload["leaves"], leaves):
+        arr = _decode_leaf(got)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(
+                f"shape mismatch {arr.shape} vs {want.shape}")
+        out.append(arr.astype(want.dtype))
+    return jax.tree.unflatten(treedef, out)

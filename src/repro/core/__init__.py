@@ -1,0 +1,22 @@
+"""Numeric core of the ASGD reproduction.
+
+Public surface:
+  ASGDConfig, asgd_update, asgd_delta_bar   — paper eqs. (2)-(7)
+  parzen_gate                               — paper eq. (4)
+  kmeans                                    — paper eqs. (8)-(10) application
+  baselines                                 — BATCH / SimuParallelSGD / MiniBatch
+  async_sim                                 — threaded GASPI-semantics simulator
+  gossip                                    — SPMD (shard_map) production path
+"""
+from .asgd import ASGDConfig, asgd_delta_bar, asgd_update, blend_externals
+from .parzen import empty_state_mask, parzen_gate, parzen_gate_inner
+
+__all__ = [
+    "ASGDConfig",
+    "asgd_delta_bar",
+    "asgd_update",
+    "blend_externals",
+    "empty_state_mask",
+    "parzen_gate",
+    "parzen_gate_inner",
+]

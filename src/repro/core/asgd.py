@@ -1,0 +1,118 @@
+"""ASGD update equations — paper section 4, eqs. (2)–(7).
+
+Everything here is purely numeric and pytree-polymorphic: the same functions
+drive the K-Means reproduction, the threaded GASPI-semantics simulator, and
+the 512-chip SPMD training path (where they run inside shard_map per worker
+group).
+
+Notation (paper -> code):
+    w_t^i                 w_i        local state of worker i
+    Delta_M(w_{t+1}^i)    dw_i       local mini-batch gradient step
+    w_{t'}^j              externals  received (stale) remote states
+    delta(i, j)           gate       Parzen-window admission, eq. (4)
+    lambda(w)             nonempty   empty-buffer mask, eq. (3)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .parzen import empty_state_mask, parzen_gate
+from .tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class ASGDConfig:
+    """Hyper-parameters of the ASGD numeric core (paper §4 'Parameters').
+
+    Attributes:
+      eps: gradient step size (paper epsilon).
+      batch: mini-batch size b — also sets the communication frequency 1/b.
+      use_parzen: if False, every non-empty external state is admitted
+        (ablation; the paper always gates).
+      silent: if True, communication is disabled entirely — ASGD degrades to
+        SimuParallelSGD (paper Fig. 14/15 'silent' mode).
+      elastic: beyond-paper variant — apply the attraction term directly to
+        the state instead of scaling it by eps inside the gradient step
+        (EASGD-style). Paper-faithful mode is elastic=False.
+      elastic_alpha: blend strength for the elastic variant.
+    """
+
+    eps: float = 0.05
+    batch: int = 500
+    use_parzen: bool = True
+    silent: bool = False
+    elastic: bool = False
+    elastic_alpha: float = 0.5
+
+
+def blend_externals(w_i, dw_i, externals: Sequence[Any], eps,
+                    use_parzen: bool = True):
+    """Gated mean of {admitted externals} ∪ {w_i} — the bracket of eq. (6).
+
+    Returns (attraction, n_good):
+      attraction = w_i - (sum_n g_n w_n + w_i) / (sum_n g_n + 1)
+      n_good     = number of admitted external states (f32 scalar).
+
+    With no admitted externals the attraction is exactly zero and eq. (6)
+    reduces to a plain mini-batch SGD step.
+    """
+    if not externals:
+        return tree_zeros_like(w_i), jnp.float32(0.0)
+
+    gates = []
+    for w_j in externals:
+        g = empty_state_mask(w_j)
+        if use_parzen:
+            g = g * parzen_gate(w_i, dw_i, w_j, eps)
+        gates.append(g)
+
+    denom = sum(gates, start=jnp.float32(1.0))          # sum g_n + 1
+    # weighted sum of admitted externals + local state
+    acc = w_i
+    for g, w_j in zip(gates, externals):
+        acc = jax.tree.map(lambda a, x, g=g: a + g * x.astype(a.dtype), acc, w_j)
+    mean = tree_scale(acc, 1.0 / denom)
+    attraction = tree_sub(w_i, mean)
+    n_good = sum(gates, start=jnp.float32(0.0))
+    return attraction, n_good
+
+
+def asgd_delta_bar(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig):
+    """Paper eq. (6): the externally-modified update step Delta-bar.
+
+    Delta_bar = [w_i - mean(admitted ∪ {w_i})] + Delta_M(w_i)
+    """
+    if cfg.silent or not externals:
+        return dw_i, jnp.float32(0.0)
+    attraction, n_good = blend_externals(
+        w_i, dw_i, externals, cfg.eps, use_parzen=cfg.use_parzen)
+    return tree_axpy(1.0, attraction, dw_i), n_good
+
+
+def asgd_update(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig):
+    """One full ASGD state update (paper alg. 5 line 8 + fig. 4 step IV).
+
+    Paper-faithful:   w <- w - eps * (attraction + Delta_M)
+    Elastic variant:  w <- (w - eps * Delta_M) - alpha * attraction
+      (attraction applied at full strength, not scaled by eps; reduces to the
+       paper's rule when alpha == eps).
+
+    Returns (w_next, n_good) where n_good counts admitted externals — the
+    paper's 'good messages' metric (Fig. 12).
+    """
+    if cfg.silent or not externals:
+        return tree_axpy(-cfg.eps, dw_i, w_i), jnp.float32(0.0)
+
+    attraction, n_good = blend_externals(
+        w_i, dw_i, externals, cfg.eps, use_parzen=cfg.use_parzen)
+    if cfg.elastic:
+        stepped = tree_axpy(-cfg.eps, dw_i, w_i)
+        w_next = tree_axpy(-cfg.elastic_alpha, attraction, stepped)
+    else:
+        delta_bar = tree_axpy(1.0, attraction, dw_i)
+        w_next = tree_axpy(-cfg.eps, delta_bar, w_i)
+    return w_next, n_good

@@ -1,0 +1,227 @@
+"""Thread-level ASGD simulator with GASPI one-sided-communication semantics.
+
+This is the *paper-faithful* execution model (DESIGN.md §2.1): R ranks run
+completely unsynchronized in OS threads; each rank owns N receive buffers that
+remote ranks write into with single-sided, unacknowledged writes, exactly like
+GPI-2 RDMA segments:
+
+  * a sender never waits — it memcpy's its state into a random recipient's
+    buffer and continues (communication is "free");
+  * delivery is uninformed — the recipient reads whatever is in the buffer
+    whenever its own mini-batch happens to finish (unbounded staleness);
+  * buffers are written WITHOUT locks, in segments, so a reader can observe a
+    torn state (the paper's §4.4 second race kind: partially overwritten
+    message) and two writers can interleave (fig. 2 scenario III);
+  * an all-zero buffer means "no message" (paper eq. 3 lambda mask).
+
+The numeric core (Parzen gate + blend) is shared with the SPMD path via
+repro.core.asgd — only the transport differs. NumPy is used on the data path
+because genuinely thread-interleaved writes require mutable buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List
+
+import numpy as np
+
+from .asgd import ASGDConfig
+
+
+# ---------------------------------------------------------------------------
+# NumPy mirrors of the numeric core (the jax versions are jit-traced and
+# awkward to call from dozens of threads; these are verified equivalent in
+# tests/test_async_sim.py)
+# ---------------------------------------------------------------------------
+
+def _parzen_gate_np(w_i, dw_i, w_j, eps):
+    stepped = w_i - eps * dw_i
+    return float(np.sum((stepped - w_j) ** 2) < np.sum((w_i - w_j) ** 2))
+
+
+def _asgd_update_np(w_i, dw_i, externals, cfg: ASGDConfig):
+    gates = []
+    for w_j in externals:
+        g = float(np.sum(w_j * w_j) > 0.0)
+        if cfg.use_parzen and g > 0.0:
+            g = _parzen_gate_np(w_i, dw_i, w_j, cfg.eps)
+        gates.append(g)
+    denom = 1.0 + sum(gates)
+    acc = w_i.copy()
+    for g, w_j in zip(gates, externals):
+        if g > 0.0:
+            acc += w_j
+    attraction = w_i - acc / denom
+    if cfg.elastic:
+        return (w_i - cfg.eps * dw_i) - cfg.elastic_alpha * attraction, sum(gates)
+    return w_i - cfg.eps * (attraction + dw_i), sum(gates)
+
+
+def _kmeans_minibatch_delta_np(batch, w):
+    d2 = (-2.0 * batch @ w.T) + np.sum(w * w, axis=1)[None, :]
+    s = np.argmin(d2, axis=1)
+    k = w.shape[0]
+    dw = np.zeros_like(w)
+    np.add.at(dw, s, w[s] - batch)
+    return dw / batch.shape[0]
+
+
+def _kmeans_error_np(x, w):
+    d2 = (-2.0 * x @ w.T) + np.sum(w * w, axis=1)[None, :]
+    s = np.argmin(d2, axis=1)
+    return float(0.5 * np.mean(np.sum((x - w[s]) ** 2, axis=1)))
+
+
+# ---------------------------------------------------------------------------
+# the simulator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AsyncSimConfig:
+    """Thread-simulator parameters (paper §4 'Parameters' + §5.2 setup).
+
+    ranks: simulated processes (paper: nodes x threads).
+    rounds: mini-batch iterations per rank (paper T).
+    n_buffers: receive buffers per rank (paper eq. 3 N).
+    fanout: random recipients per send (paper: 'a few').
+    segments: chunks per single-sided write — >1 enables torn reads
+      (set to 1 for race-free writes; races are the paper's default).
+    partial_fraction: fraction of the state sent per message (paper §4.4
+      partial updates for induced sparsity; 1.0 = full state; K-Means
+      partitions along cluster centers, i.e. rows of w).
+    straggler_ms: per-round sleep for straggler ranks (real clusters: NUMA,
+      network, OS jitter — the paper's 1024-CPU setting). 0 disables.
+    straggler_frac: fraction of ranks that are stragglers.
+    """
+
+    ranks: int = 8
+    rounds: int = 200
+    n_buffers: int = 2
+    fanout: int = 1
+    segments: int = 4
+    partial_fraction: float = 1.0
+    straggler_ms: float = 0.0
+    straggler_frac: float = 0.25
+    asgd: ASGDConfig = dataclasses.field(default_factory=ASGDConfig)
+
+
+class AsyncASGD:
+    """Runs paper alg. 5 with real threads and racy single-sided buffers."""
+
+    def __init__(self, cfg: AsyncSimConfig, shards: np.ndarray, w0: np.ndarray,
+                 grad_fn: Callable = _kmeans_minibatch_delta_np,
+                 error_fn: Callable | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.shards = shards  # (ranks, H, d_features)
+        self.w_shape = w0.shape
+        self.grad_fn = grad_fn
+        self.error_fn = error_fn or (
+            lambda w: _kmeans_error_np(shards.reshape(-1, shards.shape[-1]), w))
+        self.seed = seed
+        R = cfg.ranks
+        # local states (float64 for determinism of the math itself)
+        self.w = [w0.astype(np.float64).copy() for _ in range(R)]
+        # single-sided receive buffers: buffers[r][n] is written by remote
+        # ranks WITHOUT synchronization. zero == empty (lambda mask).
+        self.buffers = [
+            [np.zeros_like(w0, dtype=np.float64) for _ in range(cfg.n_buffers)]
+            for _ in range(R)]
+        self.msgs_sent = np.zeros(R, dtype=np.int64)
+        self.msgs_good = np.zeros(R, dtype=np.int64)
+        self.err_trace: List[List[float]] = [[] for _ in range(R)]
+
+    # -- single-sided transport ------------------------------------------------
+    def _send(self, state: np.ndarray, dst: int, slot: int, rng) -> None:
+        """Uninformed one-sided write into the recipient's buffer.
+
+        Written in `segments` chunks with thread yields in between so that
+        concurrent writes to the same slot can interleave (fig. 2, III) and a
+        concurrent read can observe a torn message (§4.4 race kind 2).
+        """
+        buf = self.buffers[dst][slot]
+        flat_src = state.reshape(-1)
+        flat_dst = buf.reshape(-1)
+        n = flat_src.shape[0]
+        seg = max(1, n // self.cfg.segments)
+        if self.cfg.partial_fraction < 1.0:
+            # paper §4.4: partial updates along the state partition (rows of
+            # w for K-Means). Send a contiguous random row-block; untouched
+            # rows keep whatever was in the buffer.
+            rows = state.shape[0]
+            nsend = max(1, int(rows * self.cfg.partial_fraction))
+            start = int(rng.integers(0, rows - nsend + 1))
+            buf[start:start + nsend] = state[start:start + nsend]
+            return
+        for off in range(0, n, seg):
+            flat_dst[off:off + seg] = flat_src[off:off + seg]
+            time.sleep(0)  # yield: let another writer interleave
+
+    # -- per-rank main loop ------------------------------------------------------
+    def _run_rank(self, r: int) -> None:
+        cfg = self.cfg
+        rng = np.random.default_rng(self.seed * 7919 + r)
+        shard = self.shards[r]
+        H = shard.shape[0]
+        is_straggler = (cfg.straggler_ms > 0
+                        and r < cfg.straggler_frac * cfg.ranks)
+        for t in range(cfg.rounds):
+            if is_straggler:
+                time.sleep(cfg.straggler_ms / 1000.0)
+            idx = rng.integers(0, H, size=cfg.asgd.batch)
+            dw = self.grad_fn(shard[idx], self.w[r])
+            # read receive buffers (racy read: snapshot copies, may be torn)
+            externals = [] if cfg.asgd.silent else [
+                b.copy() for b in self.buffers[r]]
+            w_next, n_good = _asgd_update_np(self.w[r], dw, externals, cfg.asgd)
+            self.w[r] = w_next
+            self.msgs_good[r] += int(n_good)
+            # consume: clear own buffers (GASPI notify-reset analogue)
+            if not cfg.asgd.silent:
+                for b in self.buffers[r]:
+                    b[:] = 0.0
+                # send to `fanout` random other ranks, random slots, no waiting
+                for _ in range(cfg.fanout):
+                    dst = int(rng.integers(0, cfg.ranks - 1))
+                    dst = dst if dst < r else dst + 1  # != r
+                    slot = int(rng.integers(0, cfg.n_buffers))
+                    self._send(w_next, dst, slot, rng)
+                    self.msgs_sent[r] += 1
+            if t % 10 == 0:
+                self.err_trace[r].append(self.error_fn(self.w[r]))
+
+    def run(self) -> dict:
+        threads = [threading.Thread(target=self._run_rank, args=(r,))
+                   for r in range(self.cfg.ranks)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t0
+        w_first = self.w[0]
+        w_mean = np.mean(np.stack(self.w), axis=0)
+        return {
+            "w_first": w_first,
+            "w_mean": w_mean,
+            "error_first": self.error_fn(w_first),
+            "error_mean_aggregate": self.error_fn(w_mean),
+            "msgs_sent": self.msgs_sent.copy(),
+            "msgs_good": self.msgs_good.copy(),
+            "err_trace": [list(t) for t in self.err_trace],
+            "wall_seconds": wall,
+        }
+
+
+def run_async_asgd(cfg: AsyncSimConfig, x: np.ndarray, w0: np.ndarray,
+                   seed: int = 0, **kw) -> dict:
+    """Convenience wrapper: shard `x` evenly and run the thread simulator."""
+    R = cfg.ranks
+    m = x.shape[0]
+    h = m // R
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(m)
+    shards = x[perm[: h * R]].reshape(R, h, x.shape[-1])
+    sim = AsyncASGD(cfg, shards, w0, seed=seed, **kw)
+    return sim.run()

@@ -1,0 +1,193 @@
+"""Reference optimizers the paper compares against, plus a fast vectorized
+round-based multi-worker simulator used by the benchmark harness.
+
+Implemented baselines (paper §2):
+  * BATCH            — alg. 1, MapReduce-style full-batch descent [Chu 2007]
+  * SimuParallelSGD  — alg. 3, communication-free local SGD + final average
+                       [Zinkevich 2010]
+  * MiniBatchSGD     — alg. 4, single-stream mini-batch SGD [Sculley 2010]
+  * ASGD             — alg. 5 (this paper), round-simulated here; the
+                       thread-level GASPI-semantics version lives in
+                       async_sim.py, the SPMD version in gossip.py.
+
+The round simulator models one gossip round per mini-batch (the paper's
+communication frequency 1/b), message delivery with a configurable staleness
+``delay`` (in rounds), and one random recipient per sender (a random
+permutation per round) — the paper's "send to random node != i".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import kmeans
+from .asgd import ASGDConfig, asgd_update
+
+
+# ---------------------------------------------------------------------------
+# single-stream baselines (alg. 1 and alg. 4)
+# ---------------------------------------------------------------------------
+
+def run_batch(x, w0, eps, iters, record_every=1, error_fn=None):
+    """Paper alg. 1: full-batch gradient descent. Returns (w, errors)."""
+    error_fn = error_fn or (lambda w: kmeans.quantization_error(x, w))
+
+    def step(w, _):
+        w = w - eps * kmeans.batch_delta(x, w)
+        return w, error_fn(w)
+
+    w, errs = jax.lax.scan(step, w0, None, length=iters)
+    return w, errs
+
+
+def run_minibatch_sgd(key, x, w0, eps, b, iters, error_fn=None):
+    """Paper alg. 4: sequential mini-batch SGD. Returns (w, errors)."""
+    error_fn = error_fn or (lambda w: kmeans.quantization_error(x, w))
+    m = x.shape[0]
+
+    def step(carry, key_t):
+        w = carry
+        idx = jax.random.randint(key_t, (b,), 0, m)
+        w = w - eps * kmeans.minibatch_delta(x[idx], w)
+        return w, error_fn(w)
+
+    keys = jax.random.split(key, iters)
+    w, errs = jax.lax.scan(step, w0, keys)
+    return w, errs
+
+
+# ---------------------------------------------------------------------------
+# round-based multi-worker simulation (alg. 3 and alg. 5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoundSimConfig:
+    """Configuration for the vectorized multi-worker round simulator.
+
+    Attributes:
+      workers: number of simulated ranks (paper: threads x nodes).
+      rounds: mini-batch rounds per worker (paper T; touched samples = T*b).
+      delay: message staleness in rounds (>=1; paper's asynchronous delivery
+        means a receiver always sees a *past* sender state).
+      drop_rate: probability a message is lost (paper §4.4 first race kind:
+        fully-overwritten == dropped, "completely harmless").
+      asgd: the ASGD numeric-core config (eps, b, parzen, silent, elastic).
+    """
+
+    workers: int = 16
+    rounds: int = 200
+    delay: int = 1
+    drop_rate: float = 0.0
+    asgd: ASGDConfig = dataclasses.field(default_factory=ASGDConfig)
+
+
+def shard_data(key, x, workers):
+    """Paper alg. 3/5 lines 1-2: random partition, H = floor(m/n) each."""
+    m = x.shape[0]
+    h = m // workers
+    perm = jax.random.permutation(key, m)
+    return x[perm[: h * workers]].reshape(workers, h, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "grad_fn", "error_fn"),
+)
+def simulate_rounds(key, shards, w0, cfg: RoundSimConfig,
+                    grad_fn: Callable = kmeans.minibatch_delta,
+                    error_fn: Callable | None = None):
+    """Simulate `cfg.workers` ASGD ranks for `cfg.rounds` gossip rounds.
+
+    Each round, per worker i (all vmapped):
+      1. draw a mini-batch of size cfg.asgd.batch from its own shard
+      2. dw_i = grad_fn(batch, w_i)
+      3. externals = [state of perm(i) from `delay` rounds ago]   (unless silent)
+      4. w_i <- asgd_update(w_i, dw_i, externals, cfg.asgd)
+      5. the new w_i is "sent": it enters the delivery pipeline
+
+    Returns dict with:
+      w:        (workers, *state) final per-worker states
+      errors:   (rounds,) mean error across workers per round
+      n_good:   (rounds,) mean admitted ("good") messages per worker-round
+      w_mean_error: error of the final averaged state (alg. 3 line 9 aggregate)
+    """
+    W = cfg.workers
+    b = cfg.asgd.batch
+    h = shards.shape[1]
+    if error_fn is None:
+        # fixed eval subsample: per-round error tracking must not dominate
+        # the simulation cost (strided view over the full set)
+        flat = shards.reshape(-1, shards.shape[-1])
+        stride = max(1, flat.shape[0] // 16384)
+        eval_x = flat[::stride]
+        error_fn = lambda w: kmeans.quantization_error(eval_x, w)
+
+    w_init = jnp.broadcast_to(w0, (W,) + w0.shape)
+    # delivery pipeline: ring buffer of the last `delay` rounds of states.
+    # pipe[r % delay] holds states sent `delay` rounds ago at read time.
+    pipe = jnp.broadcast_to(w0, (cfg.delay, W) + w0.shape)
+
+    def round_step(carry, inp):
+        w, pipe = carry
+        r, key_r = inp
+        k_batch, k_perm, k_drop = jax.random.split(key_r, 3)
+
+        # 1-2: local mini-batch gradient step, per worker
+        idx = jax.random.randint(k_batch, (W, b), 0, h)
+        batches = jnp.take_along_axis(
+            shards, idx[..., None], axis=1)              # (W, b, d)
+        dw = jax.vmap(grad_fn)(batches, w)
+
+        # 3: stale states from `delay` rounds ago, routed by a fresh random
+        # permutation (sender -> one random recipient, bijective)
+        stale = pipe[r % cfg.delay]                      # (W, *state)
+        perm = jax.random.permutation(k_perm, W)
+        incoming = jax.tree.map(lambda s: s[perm], stale)
+        if cfg.drop_rate > 0.0:
+            kept = (jax.random.uniform(k_drop, (W,)) >= cfg.drop_rate)
+            # dropped message == empty buffer (all zeros) -> lambda mask = 0
+            incoming = jax.tree.map(
+                lambda s: jnp.where(
+                    kept.reshape((W,) + (1,) * (s.ndim - 1)), s, 0.0),
+                incoming)
+
+        # 4: the ASGD update, vmapped over workers
+        def upd(w_i, dw_i, ext_i):
+            return asgd_update(w_i, dw_i, [ext_i], cfg.asgd)
+
+        w_next, n_good = jax.vmap(upd)(w, dw, incoming)
+
+        # 5: publish the new states into the pipeline slot we just consumed
+        pipe = pipe.at[r % cfg.delay].set(w_next)
+
+        err = jnp.mean(jax.vmap(error_fn)(w_next))
+        return (w_next, pipe), (err, jnp.mean(n_good))
+
+    keys = jax.random.split(key, cfg.rounds)
+    (w_fin, _), (errs, n_good) = jax.lax.scan(
+        round_step, (w_init, pipe), (jnp.arange(cfg.rounds), keys))
+
+    w_mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), w_fin)
+    return {
+        "w": w_fin,
+        "errors": errs,
+        "n_good": n_good,
+        "w_first_error": error_fn(jax.tree.map(lambda x: x[0], w_fin)),
+        "w_mean_error": error_fn(w_mean),
+    }
+
+
+def run_simuparallel_sgd(key, shards, w0, eps, b, rounds, error_fn=None):
+    """Paper alg. 3 via the round simulator with communication disabled.
+
+    SimuParallelSGD's final aggregate (line 9) is the mean of worker states.
+    """
+    cfg = RoundSimConfig(
+        workers=shards.shape[0], rounds=rounds, delay=1,
+        asgd=ASGDConfig(eps=eps, batch=b, silent=True))
+    out = simulate_rounds(key, shards, w0, cfg, error_fn=error_fn)
+    return out

@@ -1,0 +1,393 @@
+"""SPMD (TPU-native) ASGD gossip — DESIGN.md §2.2.
+
+Execution model: every param leaf carries a leading worker axis ``W`` that is
+sharded over the mesh's data-parallel axes (``data`` or ``(pod, data)``);
+each of the W worker groups holds its own model replica, tensor-parallel over
+``model``. One ASGD round per train step (the paper communicates once per
+mini-batch):
+
+  1. pick a random 1/p partition of the state                (partial updates §4.4)
+  2. exchange it with a ring/exponential peer:
+       jnp.roll along the worker axis with a static shift s drawn from a
+       small set via lax.switch -> XLA lowers each branch to ONE
+       collective-permute per exchanged leaf (point-to-point; the cheapest
+       collective — the moral equivalent of the paper's single-sided
+       'send to one random peer', see DESIGN.md table)
+  3. blend the *previous* round's received block (staleness delay >= 1, the
+     asynchrony analogue) through the Parzen gate, eq. (4)-(6)
+  4. store the newly received block in the staleness buffer
+
+Partial-update partitioning (paper §4.4 leaves "the choice of the
+partitioning to the application"):
+  * 'leaves' — p static leaf groups (≈ layer blocks), selected by lax.switch;
+    non-selected leaves are NOT communicated at all (they enter the exchange
+    as locally-generated zeros). This is the LM mode: every collective moves
+    |w|/p bytes and no traced offset ever touches a model-sharded dim (traced
+    dynamic-slice on a sharded axis would force XLA to all-gather the leaf —
+    measured, see EXPERIMENTS.md §Perf).
+  * 'rows' — traced dynamic-slice of 1/p of each leaf along its first
+    non-worker dim. Matches the paper's K-Means partitioning "along the
+    individual cluster centers"; only safe when that dim is unsharded.
+
+Collective bytes per step = |w| / p per worker group, vs 2|w| (ring
+all-reduce) for the synchronous BATCH baseline — the roofline tables in
+EXPERIMENTS.md quantify this on all 10 assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .asgd import ASGDConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    """SPMD gossip parameters.
+
+    shifts: static ring shifts; one is drawn per round (exponential gossip —
+      information reaches all W workers in O(log W) rounds, the scheduled
+      counterpart of 'random recipient').
+    partial_blocks: p — each round exchanges ~1/p of the state.
+    partial_mode: 'leaves' (static leaf groups) or 'rows' (traced row slice).
+    delay: staleness in rounds. delay=1 blends states received last round
+      (faithful: a receiver only ever sees a past sender state);
+      delay=0 blends immediately (synchronous gossip, beyond-paper ablation).
+    payload_dtype: wire dtype of the exchanged block. Params' own dtype by
+      default; int8 quantized gossip is a beyond-paper §Perf variant.
+    """
+
+    shifts: tuple = (1, 2, 4, 8)
+    partial_blocks: int = 4
+    partial_mode: str = "leaves"
+    delay: int = 1
+    payload_dtype: Any = None
+    # communication interval: gossip every k-th step (paper's frequency
+    # 1/b generalized — on TPU the mini-batch is the step, so the interval
+    # is expressed in steps). 1 == every step (paper default).
+    gossip_every: int = 1
+
+
+# ---------------------------------------------------------------------------
+# leaf partitioning ('leaves' mode)
+# ---------------------------------------------------------------------------
+
+def leaf_groups(params, p: int):
+    """Assign each leaf a static group id in [0, p) — greedy size balancing.
+
+    Returns a pytree of python ints (static metadata, not traced).
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    order = sorted(range(len(leaves)), key=lambda i: -leaves[i].size)
+    loads = [0] * p
+    gid = [0] * len(leaves)
+    for i in order:
+        g = min(range(p), key=lambda j: loads[j])
+        gid[i] = g
+        loads[g] += leaves[i].size
+    return jax.tree.unflatten(treedef, gid)
+
+
+def _roll_group(params, groups, g: int, shift: int):
+    """Branch body: roll group-``g`` leaves by ``shift`` along the worker
+    axis (-> collective-permute); other leaves are local zeros (no comms)."""
+    return jax.tree.map(
+        lambda x, gi: (jnp.roll(x, shift, axis=0) if gi == g
+                       else jnp.zeros_like(x)),
+        params, groups)
+
+
+def exchange_leaves(params, groups, shift_idx, block_idx, cfg: GossipConfig):
+    """lax.switch over (shift, group) static pairs. Returns the peer block
+    (full-tree shape; non-group leaves are zero and were never sent)."""
+    payload = params
+    if cfg.payload_dtype is not None:
+        payload = jax.tree.map(
+            lambda x: x.astype(cfg.payload_dtype), params)
+    branches = []
+    for s in cfg.shifts:
+        for g in range(cfg.partial_blocks):
+            branches.append(
+                lambda t, s=s, g=g: _roll_group(t, groups, g, s))
+    idx = shift_idx * cfg.partial_blocks + block_idx
+    return jax.lax.switch(idx, branches, payload)
+
+
+# ---------------------------------------------------------------------------
+# row slicing ('rows' mode — K-Means-style, unsharded feature dims only)
+# ---------------------------------------------------------------------------
+
+def _block_size(dim0: int, p: int) -> int:
+    return max(1, -(-dim0 // p))  # ceil
+
+
+def slice_rows(tree, block_idx, p):
+    """Dynamic-slice a 1/p block of every leaf along axis 1 (first non-worker
+    dim). block_idx is traced; dynamic_slice clamps trailing blocks."""
+    def f(x):
+        if x.ndim < 2:
+            return x
+        blk = _block_size(x.shape[1], p)
+        start = jnp.minimum(block_idx * blk, x.shape[1] - blk)
+        starts = (0, start) + (0,) * (x.ndim - 2)
+        return jax.lax.dynamic_slice(
+            x, starts, (x.shape[0], blk) + x.shape[2:])
+    return jax.tree.map(f, tree)
+
+
+def update_rows(tree, block_tree, block_idx, p):
+    """Inverse of slice_rows: write blended blocks back into full leaves."""
+    def f(x, b):
+        if x.ndim < 2:
+            return b.astype(x.dtype)
+        blk = _block_size(x.shape[1], p)
+        start = jnp.minimum(block_idx * blk, x.shape[1] - blk)
+        starts = (0, start) + (0,) * (x.ndim - 2)
+        return jax.lax.dynamic_update_slice(x, b.astype(x.dtype), starts)
+    return jax.tree.map(f, tree, block_tree)
+
+
+def exchange_rows(tree, shift_idx, cfg: GossipConfig):
+    """Ring exchange of a row-block tree: switch over static shifts, each
+    branch one jnp.roll along the worker axis -> collective-permute."""
+    branches = [
+        (lambda t, s=s: jax.tree.map(lambda x: jnp.roll(x, s, axis=0), t))
+        for s in cfg.shifts
+    ]
+    return jax.lax.switch(shift_idx, branches, tree)
+
+
+# ---------------------------------------------------------------------------
+# shared numeric pieces
+# ---------------------------------------------------------------------------
+
+def _per_worker_sq_dist(a, b, mask_tree=None, block_idx=None):
+    """sum_{leaves, axes>0} (a-b)^2 -> (W,). In 'leaves' mode, only leaves
+    whose static group id equals the traced block_idx contribute."""
+    def leaf_d(x, y):
+        return jnp.sum(
+            (x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2,
+            axis=tuple(range(1, x.ndim)))
+    dists = jax.tree.map(leaf_d, a, b)
+    if mask_tree is not None:
+        dists = jax.tree.map(
+            lambda d, gi: jnp.where(gi == block_idx, d, 0.0),
+            dists, mask_tree)
+    return sum(jax.tree.leaves(dists))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GossipState:
+    """Carried between rounds (part of the train state pytree).
+
+    buf: staleness buffer — the block received last round ('leaves' mode:
+      full-tree shape, zeros outside the group; 'rows' mode: block tree).
+    buf_idx: which partition index buf holds.
+    step: round counter.
+    """
+
+    buf: Any
+    buf_idx: jnp.ndarray
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.buf, self.buf_idx, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_gossip_state(params, cfg: GossipConfig) -> GossipState:
+    """Zero staleness buffer (paper eq. 3: all-zero == 'no message yet')."""
+    dt = cfg.payload_dtype
+    if cfg.partial_mode == "rows":
+        blk = slice_rows(params, jnp.int32(0), cfg.partial_blocks)
+        buf = jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=dt or x.dtype), blk)
+    else:
+        buf = jax.tree.map(
+            lambda x: jnp.zeros_like(x, dtype=dt or x.dtype), params)
+    return GossipState(buf=buf, buf_idx=jnp.int32(0), step=jnp.int32(0))
+
+
+def _blend(w_blk, ext_blk, g_blk, gate, acfg: ASGDConfig):
+    """eq. (5)/(6) with N=1 applied to one (block) leaf.
+
+    attraction = gate * (w - (w+ext)/2) = gate * (w-ext)/2
+    paper:   w <- w - eps*(attraction + Delta_M)
+    elastic: w <- (w - eps*Delta_M) - alpha*attraction
+    """
+    gexp = gate.reshape((-1,) + (1,) * (w_blk.ndim - 1))
+    w32 = w_blk.astype(jnp.float32)
+    attraction = gexp * 0.5 * (w32 - ext_blk.astype(jnp.float32))
+    if acfg.elastic:
+        out = (w32 - acfg.eps * g_blk.astype(jnp.float32)
+               - acfg.elastic_alpha * attraction)
+    else:
+        out = w32 - acfg.eps * (attraction + g_blk.astype(jnp.float32))
+    return out.astype(w_blk.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the full SPMD ASGD round
+# ---------------------------------------------------------------------------
+
+def asgd_gossip_apply(params, grads, state: GossipState, key,
+                      cfg: GossipConfig, acfg: ASGDConfig):
+    """One SPMD ASGD round: local SGD step + gossip blend (paper eqs. 4-7).
+
+    Args:
+      params: pytree, every leaf (W, ...) with W sharded over data axes.
+      grads:  matching pytree — local mini-batch steps Delta_M per group.
+      state:  GossipState staleness buffer.
+      key:    per-step PRNG key (shift + partition randomness).
+
+    Returns (new_params, new_state, metrics); metrics carries the paper's
+    'good messages' gate stats (Fig. 12).
+    """
+    W = jax.tree.leaves(params)[0].shape[0]
+    if acfg.silent:
+        new_params = jax.tree.map(
+            lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
+        state = GossipState(state.buf, state.buf_idx, state.step + 1)
+        return new_params, state, {
+            "gate": jnp.zeros((W,), jnp.float32), "n_good": jnp.float32(0.0)}
+
+    p = cfg.partial_blocks
+    k_shift, k_blk = jax.random.split(key)
+    shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
+    block_idx = jax.random.randint(k_blk, (), 0, p)
+
+    apply = _apply_rows if cfg.partial_mode == "rows" else _apply_leaves
+
+    if cfg.gossip_every <= 1:
+        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg)
+
+    # interval mode: skip communication entirely on off-steps (lax.cond —
+    # XLA compiles the collective branch with static channel ids; only the
+    # taken branch executes)
+    def gossip_branch(args):
+        params, grads, state = args
+        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg)
+
+    def silent_branch(args):
+        params, grads, state = args
+        new_params = jax.tree.map(
+            lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
+        new_state = GossipState(state.buf, state.buf_idx, state.step + 1)
+        zero = jnp.zeros((W,), jnp.float32)
+        return new_params, new_state, {"gate": zero,
+                                       "n_good": jnp.float32(0.0)}
+
+    return jax.lax.cond(
+        state.step % cfg.gossip_every == 0,
+        gossip_branch, silent_branch, (params, grads, state))
+
+
+def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
+    groups = leaf_groups(params, cfg.partial_blocks)
+    sent = exchange_leaves(params, groups, shift_idx, block_idx, cfg)
+
+    if cfg.delay == 0:
+        ext, ext_idx = sent, block_idx
+    else:
+        ext, ext_idx = state.buf, state.buf_idx
+
+    # Parzen gate (eq. 4) restricted to the buffered partition's leaves
+    stepped = jax.tree.map(
+        lambda w, g: w.astype(jnp.float32) - acfg.eps * g.astype(jnp.float32),
+        params, grads)
+    d_after = _per_worker_sq_dist(stepped, ext, groups, ext_idx)
+    d_before = _per_worker_sq_dist(params, ext, groups, ext_idx)
+    zeros = jax.tree.map(jnp.zeros_like, ext)
+    nonempty = (_per_worker_sq_dist(ext, zeros, groups, ext_idx) > 0.0)
+    if acfg.use_parzen:
+        gate = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    else:
+        gate = nonempty.astype(jnp.float32)
+
+    def upd(w, g, e, gi):
+        in_group = (gi == ext_idx)  # traced bool scalar, static group id
+        blended = _blend(w, e, g, gate, acfg)
+        plain = (w.astype(jnp.float32)
+                 - acfg.eps * g.astype(jnp.float32)).astype(w.dtype)
+        return jnp.where(in_group, blended, plain)
+
+    new_params = jax.tree.map(upd, params, grads, ext, groups)
+    new_state = GossipState(buf=sent, buf_idx=block_idx,
+                            step=state.step + 1)
+    return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
+
+
+def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
+    p = cfg.partial_blocks
+    my_block = slice_rows(params, block_idx, p)
+    sent = exchange_rows(my_block, shift_idx, cfg)
+    if cfg.payload_dtype is not None:
+        sent = jax.tree.map(
+            lambda x: x.astype(cfg.payload_dtype), sent)
+
+    if cfg.delay == 0:
+        ext, ext_idx = sent, block_idx
+    else:
+        ext, ext_idx = state.buf, state.buf_idx
+
+    local_blk = slice_rows(params, ext_idx, p)
+    grads_blk = slice_rows(grads, ext_idx, p)
+    stepped = jax.tree.map(
+        lambda w, g: w.astype(jnp.float32) - acfg.eps * g.astype(jnp.float32),
+        local_blk, grads_blk)
+    d_after = _per_worker_sq_dist(stepped, ext)
+    d_before = _per_worker_sq_dist(local_blk, ext)
+    zeros = jax.tree.map(jnp.zeros_like, ext)
+    nonempty = (_per_worker_sq_dist(ext, zeros) > 0.0)
+    if acfg.use_parzen:
+        gate = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    else:
+        gate = nonempty.astype(jnp.float32)
+
+    blended = jax.tree.map(
+        lambda w, e, g: _blend(w, e, g, gate, acfg),
+        local_blk, ext, grads_blk)
+    new_params = jax.tree.map(
+        lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
+    new_params = update_rows(new_params, blended, ext_idx, p)
+    new_state = GossipState(buf=sent, buf_idx=block_idx,
+                            step=state.step + 1)
+    return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
+
+
+# ---------------------------------------------------------------------------
+# baseline steps in the same W-leading-axis formulation (for the roofline
+# comparison: BATCH all-reduces |w| bytes, SimuParallel communicates zero)
+# ---------------------------------------------------------------------------
+
+def sync_dp_apply(params, grads, eps):
+    """Synchronous data-parallel SGD (the BATCH/MapReduce analogue):
+    grads are averaged over the worker axis -> XLA all-reduce."""
+    gmean = jax.tree.map(
+        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True),
+                                   g.shape),
+        grads)
+    return jax.tree.map(lambda w, g: w - eps * g.astype(w.dtype),
+                        params, gmean)
+
+
+def local_sgd_apply(params, grads, eps):
+    """SimuParallelSGD inner step: purely local, zero communication."""
+    return jax.tree.map(lambda w, g: w - eps * g.astype(w.dtype),
+                        params, grads)
+
+
+def final_average(params):
+    """SimuParallelSGD final aggregation (alg. 3 line 9) / ASGD optional
+    MapReduce aggregate (paper §4.3, Figs. 16/17)."""
+    return jax.tree.map(
+        lambda w: jnp.broadcast_to(jnp.mean(w, axis=0, keepdims=True),
+                                   w.shape),
+        params)

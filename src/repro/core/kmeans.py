@@ -1,0 +1,104 @@
+"""K-Means clustering as a gradient-descent problem — paper §5.1, eqs. (8)-(10).
+
+The paper evaluates ASGD on K-Means because it leaves "little room for
+algorithmic optimization other than the choice of the numerical optimization
+method". State w is the (k, d) array of cluster prototypes.
+
+  E(w)        = sum_i 1/2 (x_i - w_{s_i(w)})^2          quantization error (8)
+  batch step  : Delta(w_k) = 1/m' sum_{i: s_i = k} (x_i - w_k)        (9)
+  online step : Delta(w_k) = (x_i - w_k) for k = s_i(w)               (10)
+
+Sign convention: the paper writes updates as  w <- w - eps * Delta  with
+Delta as above; descending the quantization error requires stepping the
+prototype *toward* its assigned points, so Delta here is the *negative*
+gradient direction pre-multiplied — we keep the paper's literal form and use
+w <- w + eps * Delta equivalently via Delta := -(x - w) fed to the shared
+update functions. To stay bit-faithful to `asgd_update` (which computes
+w - eps*dw), this module returns  dw := (w_k - x_i)-style steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def assign(x, w):
+    """s_i(w): index of the closest prototype per sample.
+
+    x: (m, d), w: (k, d) -> (m,) int32.
+    Uses the MXU-friendly expansion ||x-w||^2 = ||x||^2 - 2 x.w^T + ||w||^2;
+    ||x||^2 is constant per-row and dropped. This is the same formulation the
+    Pallas kernel (repro/kernels/kmeans_assign) tiles explicitly.
+    """
+    scores = -2.0 * (x @ w.T) + jnp.sum(w * w, axis=-1)[None, :]
+    return jnp.argmin(scores, axis=-1).astype(jnp.int32)
+
+
+def quantization_error(x, w):
+    """Paper eq. (8) (mean over samples, not sum — scale-free for plots)."""
+    s = assign(x, w)
+    return 0.5 * jnp.mean(jnp.sum((x - w[s]) ** 2, axis=-1))
+
+
+def minibatch_delta(x_batch, w):
+    """Paper eq. (9) with m' = |batch|: mean attraction per prototype.
+
+    Returns dw with the `asgd_update` sign convention (w <- w - eps*dw),
+    i.e. dw_k = 1/m' sum_{i: s_i=k} (w_k - x_i); prototypes with no assigned
+    sample get dw_k = 0.
+    """
+    m = x_batch.shape[0]
+    k = w.shape[0]
+    s = assign(x_batch, w)
+    one_hot = jax.nn.one_hot(s, k, dtype=x_batch.dtype)        # (m, k)
+    counts = one_hot.sum(axis=0)                               # (k,)
+    sums = one_hot.T @ x_batch                                 # (k, d)
+    # mean over the *batch* (paper's 1/m'), not per-cluster count: matches
+    # eq. (9) literally. Empty clusters contribute zero.
+    dw = (counts[:, None] * w - sums) / m
+    return dw
+
+
+def online_delta(x_i, w):
+    """Paper eq. (10): single-sample online step (SGD baseline)."""
+    s = assign(x_i[None, :], w)[0]
+    dw = jnp.zeros_like(w).at[s].set(w[s] - x_i)
+    return dw
+
+
+def batch_delta(x, w):
+    """Paper eq. (9) with m' = m (full BATCH step, alg. 1)."""
+    return minibatch_delta(x, w)
+
+
+def ground_truth_error(w, centers_true):
+    """Paper §5.4 evaluation: distance of found prototypes to generating
+    centers, greedily matched (relative measure only — see paper caveats)."""
+    d2 = jnp.sum((w[:, None, :] - centers_true[None, :, :]) ** 2, axis=-1)
+    return jnp.mean(jnp.min(d2, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "d", "m", "spread"))
+def synthetic_clusters(key, k, d, m, spread=0.15):
+    """Paper §5.3 synthetic data: k random centers, m samples drawn around
+    them with per-cluster variance; min-distance controlled via unit-cube
+    rejection-free lattice jitter (deterministic size, jit-friendly).
+
+    Returns (x: (m, d), centers: (k, d), labels: (m,)).
+    """
+    kc, kl, kn = jax.random.split(key, 3)
+    centers = jax.random.uniform(kc, (k, d), minval=-1.0, maxval=1.0)
+    labels = jax.random.randint(kl, (m,), 0, k)
+    # per-cluster sigma in [0.5, 1.5] * spread
+    sig = spread * (0.5 + jax.random.uniform(kn, (k,)))
+    noise = jax.random.normal(jax.random.fold_in(kn, 7), (m, d))
+    x = centers[labels] + noise * sig[labels][:, None]
+    return x, centers, labels
+
+
+def init_prototypes(key, x, k):
+    """k-means|| style cheap init: random distinct samples as prototypes."""
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    return x[idx]

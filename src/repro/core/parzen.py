@@ -1,0 +1,73 @@
+"""Parzen-window gate — paper eq. (4).
+
+An external state ``w_j`` is admitted to the local blend only if stepping the
+local state by its own gradient update brings it *closer* to ``w_j`` than it
+was before the step:
+
+    delta(i, j) = 1  iff  || (w_i - eps * dw_i) - w_j ||^2  <  || w_i - w_j ||^2
+
+Geometrically: w_j lies "ahead" of w_i along the local descent direction, so
+pulling toward it is consistent with the local gradient; states lying "behind"
+(stale senders whose optimization is less advanced) are rejected.
+
+The gate expands to  2*eps*<dw_i, w_i - w_j> < eps^2*||dw_i||^2 , i.e. it only
+needs three inner products — this identity is what the fused Pallas kernel
+(repro/kernels/parzen_blend) exploits to evaluate the gate in the same HBM
+pass as the blend itself.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .tree import tree_axpy, tree_sq_dist
+
+
+def parzen_gate(w_i, dw_i, w_j, eps):
+    """Paper eq. (4): return 1.0 if w_j improves the update, else 0.0.
+
+    Args:
+      w_i: local state (pytree).
+      dw_i: local (mini-batch) gradient step Delta_M(w_i) (pytree).
+      w_j: candidate external state (pytree).
+      eps: step size (scalar).
+
+    Returns:
+      f32 scalar in {0., 1.}.
+    """
+    stepped = tree_axpy(-eps, dw_i, w_i)           # w_i - eps * dw_i
+    d_after = tree_sq_dist(stepped, w_j)
+    d_before = tree_sq_dist(w_i, w_j)
+    return (d_after < d_before).astype(jnp.float32)
+
+
+def parzen_gate_inner(w_i, dw_i, w_j, eps):
+    """Algebraically expanded form of eq. (4).
+
+    || (w_i - eps dw) - w_j ||^2 < || w_i - w_j ||^2
+      <=>  -2 eps <dw, w_i - w_j> + eps^2 ||dw||^2 < 0
+      <=>  2 <dw, w_i - w_j> > eps ||dw||^2
+
+    One fewer full-state traversal than the direct form; used by the fused
+    kernel and verified equivalent in tests/test_parzen.py.
+    """
+    import jax
+
+    dots = jax.tree.map(
+        lambda dw, wi, wj: jnp.sum(
+            dw.astype(jnp.float32)
+            * (wi.astype(jnp.float32) - wj.astype(jnp.float32))),
+        dw_i, w_i, w_j)
+    lhs = 2.0 * sum(jax.tree.leaves(dots), start=jnp.float32(0.0))
+    sqn = jax.tree.map(lambda dw: jnp.sum(dw.astype(jnp.float32) ** 2), dw_i)
+    rhs = eps * sum(jax.tree.leaves(sqn), start=jnp.float32(0.0))
+    return (lhs > rhs).astype(jnp.float32)
+
+
+def empty_state_mask(w_j):
+    """Paper eq. (3) lambda: an all-zero buffer means 'no message received'.
+
+    Returns 1.0 if ||w_j||_2 > 0 (a real message), else 0.0.
+    """
+    from .tree import tree_sq_norm
+
+    return (tree_sq_norm(w_j) > 0.0).astype(jnp.float32)

@@ -1,0 +1,59 @@
+"""Pytree arithmetic helpers used throughout the ASGD core.
+
+All ASGD update equations operate on whole model states ``w`` which in the
+framework are arbitrary pytrees of arrays. These helpers keep the update
+code readable and identical between the K-Means application (flat arrays)
+and the LM training path (nested param trees).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_sq_dist(a, b):
+    """Global squared L2 distance between two states: sum over all leaves.
+
+    This is the quantity the Parzen-window gate (paper eq. 4) compares.
+    Computed in f32 regardless of param dtype for numeric stability.
+    """
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x, y: jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2),
+        a, b))
+    return sum(leaves, start=jnp.float32(0.0))
+
+
+def tree_sq_norm(a):
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda x: jnp.sum(x.astype(jnp.float32) ** 2), a))
+    return sum(leaves, start=jnp.float32(0.0))
+
+
+def tree_where(pred, a, b):
+    """Select state ``a`` where ``pred`` (scalar bool/0-1) else ``b``."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel ships three modules:
+  <name>/kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  <name>/ops.py    — the jit'd public wrapper (auto shape padding, dtype)
+  <name>/ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels (DESIGN.md §6):
+  kmeans_assign — E-step distances + argmin + M-step partial sums (the
+                  paper's K-Means inner loop), MXU-tiled.
+  parzen_blend  — fused ASGD update eq. (4)+(6): gate distances and the
+                  gated blend in one HBM pass.
+  ssd_scan      — mamba-2 chunked SSD inner scan.
+
+Validated with interpret=True on CPU (TPU is the deployment target).
+"""

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused K-Means E-step + M-step partials.
+
+The paper's compute hot-spot (every ASGD round runs eq. 9/10 over a
+mini-batch). TPU adaptation of the distance computation: ||x - w||^2 is
+expanded to -2 x.w^T + ||w||^2 (the ||x||^2 term is row-constant and drops
+out of the argmin) so the inner loop is ONE (bm, D) x (D, K) matmul on the
+MXU instead of a VPU-bound broadcast-subtract-square, plus a fused
+one-hot^T @ x matmul for the M-step partial sums — the mini-batch never
+leaves VMEM between the E and M steps.
+
+Grid: (M / bm,) sequential; the (K, D) prototype block stays resident in
+VMEM across iterations; sums/counts accumulate in VMEM output blocks
+(initialized at grid step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, idx_ref, sums_ref, counts_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...]                                   # (bm, D)   VMEM
+    w = w_ref[...]                                   # (K, D)    VMEM
+    # E-step: scores on the MXU
+    scores = (-2.0) * jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bm, K)
+    scores = scores + jnp.sum(w * w, axis=-1,
+                              dtype=jnp.float32)[None, :]
+    idx = jnp.argmin(scores, axis=-1)                # (bm,)
+    idx_ref[...] = idx.astype(jnp.int32)[:, None]
+
+    # M-step partials: one-hot^T @ x, still in VMEM
+    k = w.shape[0]
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, k), 1)).astype(jnp.float32)   # (bm, K)
+    psums = jax.lax.dot_general(
+        onehot, x.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (K, D)
+    sums_ref[...] += psums
+    counts_ref[...] += jnp.sum(onehot, axis=0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def kmeans_assign_pallas(x, w, *, bm: int = 256, interpret: bool = True):
+    """x: (M, D) f32, w: (K, D) f32; M % bm == 0 (ops.py pads).
+
+    Returns (idx (M,), sums (K, D), counts (K,)).
+    VMEM per step: bm*D + K*D + bm*K + K*D + K floats — with bm=256,
+    K<=1024, D<=128 about 1.3 MB, comfortably inside the ~16 MB budget;
+    bm and K are multiples of 8/128 for MXU alignment (ops.py enforces).
+    """
+    m, d = x.shape
+    k = w.shape[0]
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    idx, sums, counts = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w)
+    return idx[:, 0], sums, counts[:, 0]

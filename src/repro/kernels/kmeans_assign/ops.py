@@ -1,0 +1,46 @@
+"""Public wrapper: shape padding + alignment for the kmeans_assign kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import kmeans_assign_pallas
+
+
+def _pad_to(n, mult):
+    return (n + mult - 1) // mult * mult
+
+
+def kmeans_assign(x, w, *, bm: int = 256, interpret: bool = True):
+    """Fused E/M step. x: (M, D), w: (K, D) any float dtype.
+
+    Pads M to a multiple of bm, K to a multiple of 8 and D to a multiple of
+    128 (MXU lane alignment); padded samples are placed at +inf distance
+    via a sentinel prototype trick: padded rows of x are zeros and their
+    results are sliced away before returning; padded prototypes get +inf
+    norm so no real sample selects them.
+    """
+    m, d = x.shape
+    k = w.shape[0]
+    mp = _pad_to(m, bm)
+    kp = _pad_to(max(k, 8), 8)
+    dp = _pad_to(d, 128)
+
+    xp = jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(
+        x.astype(jnp.float32))
+    # padded prototypes: huge coordinates -> ||w||^2 dominates -> never argmin
+    wp = jnp.full((kp, dp), 1e15, jnp.float32).at[:k, :d].set(0.0)
+    wp = wp.at[:k, :d].set(w.astype(jnp.float32))
+    wp = wp.at[:k, d:].set(0.0)
+
+    idx, sums, counts = kmeans_assign_pallas(
+        xp, wp, bm=bm, interpret=interpret)
+    # drop padded samples' contributions (they selected some prototype):
+    # padded x rows are all-zero; subtract their count/sum contribution.
+    n_pad = mp - m
+    if n_pad:
+        pad_idx = idx[m:]
+        pad_onehot = (pad_idx[:, None] == jnp.arange(kp)[None, :]) \
+            .astype(jnp.float32)
+        counts = counts - pad_onehot.sum(0)
+        # padded rows are zero vectors: sums need no correction
+    return (idx[:m].astype(jnp.int32), sums[:k, :d], counts[:k])

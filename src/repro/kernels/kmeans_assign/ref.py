@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the K-Means E/M fused step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x, w):
+    """x: (M, D), w: (K, D) ->
+      idx    (M,)  int32   — closest prototype per sample (E-step)
+      sums   (K, D) f32    — sum of samples per prototype (M-step partial)
+      counts (K,)  f32     — samples per prototype
+
+    The mini-batch gradient eq. (9) follows as
+      dw = (counts[:, None] * w - sums) / M.
+    """
+    scores = (-2.0 * (x @ w.T)
+              + jnp.sum(w * w, axis=-1)[None, :])          # (M, K)
+    idx = jnp.argmin(scores, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(idx, w.shape[0], dtype=x.dtype)  # (M, K)
+    sums = onehot.T @ x                                      # (K, D)
+    counts = jnp.sum(onehot, axis=0)                         # (K,)
+    return idx, sums.astype(jnp.float32), counts.astype(jnp.float32)
+
+
+def minibatch_delta_from_stats(w, sums, counts, m):
+    """Paper eq. (9) from the kernel's fused M-step statistics."""
+    return (counts[:, None] * w - sums) / m

@@ -1,0 +1,93 @@
+"""Pallas TPU kernels: fused ASGD Parzen gate + blend (paper eqs. 4-6).
+
+The naive jnp update sweeps HBM ~5x per gossip round (d_after, d_before,
+nonempty reductions, then the blend, each reading multi-GB states). Fused
+form, two passes:
+
+  pass 1 (parzen_reduce): ONE sweep accumulating all three reduction terms
+    simultaneously — using the expanded identity from core/parzen.py:
+      d_before - d_after = 2*eps*<dw, w-ext> - eps^2*||dw||^2
+    so only <dw, w-ext>, ||dw||^2 and ||ext||^2 are needed.
+  pass 2 (parzen_apply): elementwise blend with the scalar gate.
+
+2 HBM sweeps instead of ~5: the gossip update is purely memory-bound, so
+this is a direct ~2.5x on the ASGD overhead (measured in
+benchmarks/spmd_step.py: kernel_vs_ref).
+
+Grid: 1-D over row blocks of the state viewed as (R, LANE) with
+LANE=512 f32 lanes; reductions accumulate in a (1, 3) VMEM output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 512
+
+
+def _reduce_kernel(w_ref, ext_ref, dw_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    ext = ext_ref[...].astype(jnp.float32)
+    dw = dw_ref[...].astype(jnp.float32)
+    dot_dw_diff = jnp.sum(dw * (w - ext))
+    sq_dw = jnp.sum(dw * dw)
+    sq_ext = jnp.sum(ext * ext)
+    acc_ref[0, 0] += dot_dw_diff
+    acc_ref[0, 1] += sq_dw
+    acc_ref[0, 2] += sq_ext
+
+
+def _apply_kernel(w_ref, ext_ref, dw_ref, gate_ref, out_ref, *, eps):
+    gate = gate_ref[0, 0]
+    w = w_ref[...].astype(jnp.float32)
+    ext = ext_ref[...].astype(jnp.float32)
+    dw = dw_ref[...].astype(jnp.float32)
+    out = w - eps * (gate * 0.5 * (w - ext) + dw)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def parzen_reduce_pallas(w2d, ext2d, dw2d, *, block_rows=64,
+                         interpret=True):
+    """w2d/ext2d/dw2d: (R, LANE); R % block_rows == 0.
+    Returns (3,) f32: [<dw, w-ext>, ||dw||^2, ||ext||^2]."""
+    r = w2d.shape[0]
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    acc = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
+        interpret=interpret,
+    )(w2d, ext2d, dw2d)
+    return acc[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_rows", "interpret"))
+def parzen_apply_pallas(w2d, ext2d, dw2d, gate, *, eps, block_rows=64,
+                        interpret=True):
+    """Elementwise blend with scalar gate; returns updated (R, LANE)."""
+    r = w2d.shape[0]
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_apply_kernel, eps=eps),
+        grid=grid,
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, w2d.dtype),
+        interpret=interpret,
+    )(w2d, ext2d, dw2d, gate.reshape(1, 1))

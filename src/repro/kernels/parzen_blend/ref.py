@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused Parzen-gate + blend update (eqs. 4-6)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def parzen_blend_ref(w, ext, dw, eps):
+    """Flat-state ASGD update with one external (eq. 5 semantics).
+
+    w, ext, dw: (N,) f32. Returns (w_next (N,), gate scalar f32).
+
+      gate = [||(w - eps*dw) - ext||^2 < ||w - ext||^2] * [||ext|| > 0]
+      w_next = w - eps * (gate * (w - ext)/2 + dw)
+    """
+    w = w.astype(jnp.float32)
+    ext = ext.astype(jnp.float32)
+    dw = dw.astype(jnp.float32)
+    stepped = w - eps * dw
+    d_after = jnp.sum((stepped - ext) ** 2)
+    d_before = jnp.sum((w - ext) ** 2)
+    nonempty = jnp.sum(ext * ext) > 0.0
+    gate = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    w_next = w - eps * (gate * 0.5 * (w - ext) + dw)
+    return w_next, gate

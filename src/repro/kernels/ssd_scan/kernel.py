@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: mamba-2 chunked SSD scan (state-space duality).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): all intra-chunk
+work is expressed as (Q, Q)/(Q, N)/(N, P) matmuls on the MXU — including the
+within-chunk cumulative sums, which become lower-triangular matmuls instead
+of sequential scans (TPU has no cheap per-lane scan primitive). The
+inter-chunk recurrence h <- decay * h + S_c lives in a VMEM scratch that
+persists across the sequential chunk grid dimension.
+
+Grid: (B*H, n_chunks) — chunks innermost, executed sequentially per (b, h)
+so the state hand-off is correct; (b,h) programs are independent.
+
+Per-step VMEM: x (Q, P), B/C (Q, N), dt (Q, 1), scratch h (N, P), y (Q, P);
+with Q=128, N=128, P=64 about 0.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
+            *, nc):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[0, 0]                                  # scalar (this head)
+    x = x_ref[0].astype(jnp.float32)                 # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)               # (Q, 1)
+    Bm = b_ref[0].astype(jnp.float32)                # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (Q, N)
+    q = x.shape[0]
+
+    la = dt * A                                      # (Q,1) log-decay/step
+    # inclusive cumsum as a lower-triangular matmul (MXU, not a scan)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril_inc = (ii >= jj).astype(jnp.float32)        # includes diagonal
+    lcum = jax.lax.dot_general(
+        tril_inc, la, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q,1) L_i
+    ltot = jnp.sum(la, axis=0)[0]                    # chunk total decay
+
+    # intra-chunk: gamma_ij = (C_i.B_j) exp(L_i - L_j) [i>=j]
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q,Q)
+    decay = jnp.exp(jnp.clip(lcum - lcum[:, 0][None, :], -60.0, 0.0))
+    gamma = cb * decay * tril_inc
+    xdt = x * dt                                     # (Q,P)
+    y = jax.lax.dot_general(
+        gamma, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q,P)
+
+    # inter-chunk contribution: exp(L_i) * C_i . h_prev
+    h = h_ref[...]                                   # (N,P)
+    y += jnp.exp(jnp.clip(lcum, -60.0, 0.0)) * jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: h <- exp(ltot) h + sum_j exp(ltot - L_j) B_j (x dt)_j
+    sdecay = jnp.exp(jnp.clip(ltot - lcum, -60.0, 0.0))  # (Q,1)
+    s_c = jax.lax.dot_general(
+        Bm * sdecay, xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (N,P)
+    h_new = jnp.exp(jnp.clip(ltot, -60.0, 0.0)) * h + s_c
+    h_ref[...] = h_new
+
+    @pl.when(c_idx == nc - 1)
+    def _emit_final():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=True):
+    """x: (BH, S, P) f32, dt: (BH, S, 1), A: (BH, 1), B/C: (BH, S, N);
+    S % chunk == 0 (ops.py pads). Returns (y (BH,S,P), h (BH,N,P)).
+
+    The (b, h) pairs are flattened into the first grid dim; per head the
+    chunk dim runs sequentially carrying the VMEM state scratch.
+    """
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    grid = (bh, nc)
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),          # A
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),  # x
+            pl.BlockSpec((1, chunk, 1), lambda i, c: (i, c, 0)),  # dt
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),  # B
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),  # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),  # y
+            pl.BlockSpec((1, n, p), lambda i, c: (i, 0, 0)),      # h final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, B, C)
+    return y, h

@@ -1,0 +1,43 @@
+"""Public wrapper for the SSD-scan kernel: layout + padding glue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=True):
+    """Model-layout entry point, mirroring repro.models.ssm.ssd_chunked.
+
+    x: (Bb, S, H, P); dt: (Bb, S, H); A: (H,); B, C: (Bb, S, 1, N).
+    Returns (y (Bb,S,H,P), h_final (Bb,H,N,P)).
+
+    Flattens (Bb, H) into the kernel's independent grid dim; B/C (shared
+    across heads, G=1) are broadcast per head. Pads S to a chunk multiple
+    with dt=0 rows (exact: zero dt -> decay 1, zero input contribution).
+    """
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Sp = -(-S // chunk) * chunk
+    pad = Sp - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * H, Sp, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, Sp, 1)
+    Af = jnp.broadcast_to(A[None, :], (Bb, H)).reshape(Bb * H, 1)
+    Bf = jnp.broadcast_to(B[:, :, 0][:, None], (Bb, H, Sp, N)) \
+        .reshape(Bb * H, Sp, N)
+    Cf = jnp.broadcast_to(C[:, :, 0][:, None], (Bb, H, Sp, N)) \
+        .reshape(Bb * H, Sp, N)
+
+    y, h = ssd_scan_pallas(
+        xf.astype(jnp.float32), dtf.astype(jnp.float32), Af,
+        Bf.astype(jnp.float32), Cf.astype(jnp.float32),
+        chunk=chunk, interpret=interpret)
+    y = y.reshape(Bb, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+    h = h.reshape(Bb, H, N, P)
+    return y, h

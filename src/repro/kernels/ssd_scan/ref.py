@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the chunked SSD scan — delegates to the model's
+sequential-recurrence reference (the slow-but-obviously-correct form)."""
+from __future__ import annotations
+
+from ...models.ssm import ssd_reference
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), B/C: (B,S,1,N).
+    Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    return ssd_reference(x, dt, A, B, C)

@@ -1,0 +1,160 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * 197e12)            [bf16 MXU peak]
+memory term     = HLO_bytes / (chips * 819e9)             [HBM BW]
+collective term = collective_bytes / (chips * 50e9)       [ICI per link]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (already
+whole-program, loop trip counts included). collective_bytes is NOT in
+cost_analysis: we parse the optimized HLO text, summing buffer sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with op-specific wire multipliers (ring all-reduce
+moves ~2x the buffer) and a trip-count multiplier for collectives living
+inside while-loop bodies (layer-stack scans execute their body n_cycles
+times — a static text parse would otherwise undercount by that factor).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# wire bytes moved per device, as a multiple of the op's buffer size
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str, scan_trip_counts=None) -> dict:
+    """Sum wire bytes of collective ops in optimized HLO.
+
+    scan_trip_counts: optional dict mapping a regex matched against the
+    enclosing computation name -> trip count multiplier (e.g.
+    {r"while": 12} for a 12-cycle layer scan). Unmatched -> 1.
+    Returns {'total': float, 'by_op': {op: bytes}, 'count': int}.
+    """
+    scan_trip_counts = scan_trip_counts or {}
+    by_op: dict[str, float] = {}
+    count = 0
+    comp_name = ""
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and s.endswith("{") and "(" in s:
+            comp_name = s.split(" ")[0]
+            continue
+        if s.startswith("ENTRY"):
+            comp_name = "ENTRY"
+            continue
+        m = re.search(
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:\.\d+)?\(", s)
+        if not m or "=" not in s:
+            continue
+        # skip -start/-done duplicates (count the -start only)
+        if "-done" in s.split("=")[1].split("(")[0]:
+            continue
+        op = m.group(1)
+        lhs = s.split("=")[1]
+        shapes = _TUPLE_SHAPE_RE.findall(lhs.split("(")[0])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        mult = 1.0
+        for pat, trips in scan_trip_counts.items():
+            if re.search(pat, comp_name):
+                mult = float(trips)
+                break
+        wire = nbytes * _WIRE_FACTOR[op] * mult
+        by_op[op] = by_op.get(op, 0.0) + wire
+        count += 1
+    return {"total": sum(by_op.values()), "by_op": by_op, "count": count}
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+
+    @property
+    def compute_s(self) -> float:
+        # cost_analysis() reports ONE device's SPMD program (verified against
+        # analytic embed/head flops in EXPERIMENTS.md §Dry-run)
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # collective_bytes is per-device wire traffic
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    def as_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant, "useful_ratio": self.useful_ratio,
+        }
+
+
+def model_flops(cfg, shape, chips: int = 1) -> float:
+    """MODEL_FLOPS = 6*N*D tokens for train, 2*N*D for forward-only
+    (N = active params, D = tokens processed this step). Divided by `chips`
+    to compare against per-device HLO flops."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    tokens = shape.global_batch  # decode: ONE token per sequence
+    return 2.0 * n_active * tokens / chips

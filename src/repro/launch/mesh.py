@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes (data, model) — 16 ASGD worker
+groups, each 16-way tensor-parallel. Multi-pod: (2, 16, 16) = 512 chips,
+axes (pod, data, model) — the pod axis extends the ASGD worker set to 32
+groups; gossip ppermutes run over the combined (pod, data) super-axis so a
+shift can cross the DCI (see core/gossip.py + DESIGN.md §5).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run forces 512 host devices before first init;
+tests and benches see the single real device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over however many (fake) devices the host exposes —
+    used by tests and the smoke dry-run."""
+    n = len(jax.devices())
+    data = min(data, max(1, n // model))
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes the ASGD worker dimension is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_worker_groups(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))

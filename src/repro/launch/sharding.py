@@ -1,0 +1,216 @@
+"""PartitionSpecs for params, optimizer state, batches and caches.
+
+Scheme (DESIGN.md §5): the mesh is (data=16, model=16) [+ pod=2]. Training
+params carry a leading worker axis W sharded over (pod+)data — each ASGD
+worker group owns a full replica, tensor-parallel over `model`:
+
+  leaf kind                    spec (after the leading W axis)
+  -------------------------------------------------------------
+  embed (V, D)                 (model, None)    vocab-sharded
+  lm_head (D, V)               (None, model)
+  attn wq (D, H, Dh)           (None, model, None)   heads over model
+  attn wk/wv (D, KV, Dh)       (None, model, None) if KV%16==0 else repl
+  attn wo (H, Dh, D)           (model, None, None)
+  mlp gate/up (D, F)           (None, model)
+  mlp down (F, D)              (model, None)
+  moe experts (E, D, F)        (model, None, None)   expert-parallel
+  ssd in/out proj              contracting-dim sharded
+  rglru in/out + w_a/w_x       lru-width sharded
+  norms / scalars              replicated
+
+Serving params drop the W axis (same specs shifted left); batches shard
+their batch dim over (pod+)data; decode KV caches shard KV heads over
+`model` when divisible, else the sequence axis.
+
+Scan-stacked layer leaves carry an extra leading n_cycles axis (always
+replicated) — handled by path inspection.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _key_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return names
+
+
+def _spec_candidates(names: list[str], ndim: int):
+    """Ordered candidate specs (best first) for one param leaf WITHOUT its
+    worker/scan leading axes. The chooser takes the first candidate whose
+    sharded dims divide evenly (small head counts — 9, 6, 4 — fall back to
+    sharding d_model/d_ff instead of replicating)."""
+    m = "model"
+    leaf = names[-1] if names else ""
+    if "moe" in names:
+        if leaf == "router":
+            return [(None, None)]
+        # (E, D, F) / (E, F, D): expert-parallel first, then inner dims
+        return [(m, None, None), (None, None, m), (None, m, None)]
+    if "attn" in names or "cross" in names:
+        if leaf == "wq":                          # (D, H, Dh)
+            return [(None, m, None), (m, None, None)]
+        if leaf in ("wk", "wv"):                  # (D, KV, Dh)
+            return [(None, m, None), (m, None, None)]
+        if leaf == "wo":                          # (H, Dh, D)
+            return [(m, None, None), (None, None, m)]
+        if leaf == "bq":
+            return [(m, None)]
+        if leaf in ("bk", "bv"):
+            return [(m, None)]
+        return [(None,) * ndim]                   # q_norm/k_norm scales
+    if "ssm" in names:
+        if leaf == "in_proj":                     # (D, Dproj)
+            return [(None, m), (m, None)]
+        if leaf == "out_proj":                    # (d_inner, D)
+            return [(m, None), (None, m)]
+        if leaf in ("conv_w", "conv_b"):          # (K, C)/(C,)
+            return [(None,) * (ndim - 1) + (m,)]
+        return [(None,) * ndim]                   # A/D/dt/norm small
+    if "rglru" in names:
+        if leaf in ("in_x", "in_gate"):           # (D, Wl)
+            return [(None, m), (m, None)]
+        if leaf in ("w_a", "w_x"):                # (Wl, Wl)
+            return [(None, m), (m, None)]
+        if leaf == "out":                         # (Wl, D)
+            return [(m, None), (None, m)]
+        if leaf in ("conv_w",):
+            return [(None, m)]
+        if leaf in ("conv_b", "b_a", "b_x", "Lambda"):
+            return [(m,)]
+        return [(None,) * ndim]
+    if "mlp" in names:
+        if leaf in ("gate", "up"):                # (D, F)
+            return [(None, m), (m, None)]
+        if leaf == "down":                        # (F, D)
+            return [(m, None), (None, m)]
+        if leaf == "up_b":
+            return [(m,)]
+        return [(None,) * ndim]                   # down_b
+    if leaf == "embed":                           # (V, D)
+        return [(m, None), (None, m)]
+    if leaf == "lm_head":                         # (D, V)
+        return [(None, m), (m, None)]
+    return [(None,) * ndim]                       # norms, scalars
+
+
+def _divides(spec, shape, axis_sizes) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        size = axis_sizes[ax] if isinstance(ax, str) else \
+            __import__("math").prod(axis_sizes[a] for a in ax)
+        if dim % size:
+            return False
+    return True
+
+
+def param_pspec(path, leaf, *, axis_sizes, worker_axes=("data",),
+                train=True):
+    """Full PartitionSpec for a param leaf (train: leading W axis).
+    Picks the first divisibility-satisfying candidate."""
+    names = _key_names(path)
+    scanned = any(n.startswith("pos") for n in names) or "scan" in names
+    extra = (1 if train else 0) + (1 if scanned else 0)
+    tail_ndim = leaf.ndim - extra
+    tail_shape = leaf.shape[extra:]
+    tail = None
+    for cand in _spec_candidates(names, tail_ndim):
+        cand = tuple(cand)[:tail_ndim]
+        cand = cand + (None,) * (tail_ndim - len(cand))
+        if _divides(cand, tail_shape, axis_sizes):
+            tail = cand
+            break
+    if tail is None:
+        tail = (None,) * tail_ndim
+    lead = ()
+    if train:
+        lead += (worker_axes if len(worker_axes) > 1 else worker_axes[0],)
+    if scanned:
+        lead += (None,)
+    return P(*lead, *tail)
+
+
+def tree_pspecs(mesh, tree, *, worker_axes=("data",), train=True):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def f(path, leaf):
+        return param_pspec(path, leaf, axis_sizes=axis_sizes,
+                           worker_axes=worker_axes, train=train)
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def tree_shardings(mesh, tree, **kw):
+    specs = tree_pspecs(mesh, tree, **kw)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+def batch_pspec(leaf_ndim: int, *, worker_axes=("data",), train=True):
+    """tokens (W, B, S) / frames (W, B, S, D) for train;
+    (B, S)/(B, S, D) for serve with batch over data axes."""
+    wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    if train:
+        return P(wa, *(None,) * (leaf_ndim - 1))
+    return P(wa, *(None,) * (leaf_ndim - 1))
+
+
+def cache_pspec(path, leaf, cfg, *, axis_sizes, worker_axes=("data",)):
+    """Decode KV caches: (B, S, KV, Dh) — batch over data (when divisible;
+    long_500k's batch=1 degrades to replicated); KV heads over model if
+    divisible, else shard S.
+
+    SSM/RG-LRU states: shard the channel/head dims over model."""
+    names = _key_names(path)
+    wa = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+    scanned = any(n.startswith("pos") for n in names)
+    lead = (None,) if scanned else ()
+    off = 1 if scanned else 0
+    leaf_nd = leaf.ndim - off
+    name = names[-1]
+    m_size = axis_sizes.get("model", 1)
+    w_size = 1
+    for a in (worker_axes if isinstance(worker_axes, (list, tuple))
+              else [worker_axes]):
+        w_size *= axis_sizes.get(a, 1)
+    batch = leaf.shape[off]
+    wa_or_none = wa if batch % w_size == 0 else None
+
+    if name in ("k", "v", "cross_k", "cross_v"):
+        kv = leaf.shape[-2]
+        seq = leaf.shape[-3]
+        if kv % m_size == 0:
+            return P(*lead, wa_or_none, None, "model", None)
+        if seq % m_size == 0:
+            return P(*lead, wa_or_none, "model", None, None)  # shard seq
+        return P(*lead, wa_or_none, None, None, None)
+    if name == "ssm":                              # (B, H, N, P)
+        if leaf.shape[off + 1] % m_size == 0:
+            return P(*lead, wa_or_none, "model", None, None)
+        return P(*lead, wa_or_none, *(None,) * (leaf_nd - 1))
+    if name == "conv":                             # (B, K-1, C)
+        if leaf.shape[-1] % m_size == 0:
+            return P(*lead, wa_or_none, None, "model")
+        return P(*lead, wa_or_none, None, None)
+    if name == "h":                                # rglru state (B, W)
+        if leaf.shape[-1] % m_size == 0:
+            return P(*lead, wa_or_none, "model")
+        return P(*lead, wa_or_none, None)
+    return P(*lead, wa_or_none, *(None,) * (leaf_nd - 1))
+
+
+def cache_shardings(mesh, cache, cfg, **kw):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, cache_pspec(p, l, cfg, axis_sizes=axis_sizes, **kw)),
+        cache)

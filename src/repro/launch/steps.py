@@ -1,0 +1,266 @@
+"""Jittable train / prefill / decode steps + ShapeDtypeStruct input specs.
+
+train_step (ASGD, the paper's contribution as a first-class feature):
+  state = {params (leading W worker axis), gossip: GossipState, step}
+  1. per-worker mini-batch loss/grads       (vmapped over W)
+  2. asgd_gossip_apply: local SGD + partial-state ppermute + Parzen blend
+  Baselines selectable via algo=: 'asgd' | 'silent' (SimuParallelSGD) |
+  'sync' (BATCH/MapReduce analogue, all-reduce every step).
+
+serve steps build on repro.models.model prefill/decode (no worker axis —
+serving uses one replica set, tensor-parallel over `model`, batch over
+`data`(+`pod`)).
+
+All functions here are shape-polymorphic over the mesh; the dry-run calls
+them with ShapeDtypeStructs via .lower()/.compile() only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.asgd import ASGDConfig
+from ..core.gossip import (GossipConfig, asgd_gossip_apply, init_gossip_state,
+                           local_sgd_apply, sync_dp_apply)
+from ..models import model as M
+from . import sharding as SH
+from .mesh import data_axes, n_worker_groups
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, mesh, *, train: bool):
+    """Host-batch ShapeDtypeStructs for one step, sharded.
+
+    train: tokens (W, B_local, S) where W = worker groups and
+    B_local = global_batch / W. serve: (B_global, S) with batch over data.
+    """
+    wa = data_axes(mesh)
+    W = n_worker_groups(mesh)
+    S = shape.seq_len
+    if cfg.frontend == "vision":
+        S_text = S - cfg.prefix_len
+    else:
+        S_text = S
+
+    def mk(shp, dtype):
+        spec = SH.batch_pspec(len(shp), worker_axes=wa, train=train)
+        return jax.ShapeDtypeStruct(
+            shp, dtype, sharding=jax.sharding.NamedSharding(
+                mesh, spec))
+
+    out = {}
+    if train:
+        B_local = max(1, shape.global_batch // W)
+        lead = (W, B_local)
+    else:
+        lead = (shape.global_batch,)
+    out["tokens"] = mk(lead + (S_text,), jnp.int32)
+    if cfg.frontend == "audio":
+        out["frames"] = mk(lead + (cfg.encoder_seq, cfg.d_model),
+                           PARAM_DTYPE)
+    if cfg.frontend == "vision":
+        out["patches"] = mk(lead + (cfg.prefix_len, cfg.d_model),
+                            PARAM_DTYPE)
+    return out
+
+
+def params_struct(cfg: ModelConfig, mesh, *, train: bool):
+    """ShapeDtypeStructs for params (leading W axis when train)."""
+    W = n_worker_groups(mesh)
+    wa = data_axes(mesh)
+    shapes = jax.eval_shape(
+        lambda: M.init_model(cfg, jax.random.key(0), dtype=PARAM_DTYPE))
+    if train:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((W,) + s.shape, s.dtype), shapes)
+    shardings = SH.tree_shardings(mesh, shapes, worker_axes=wa, train=train)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    wa = data_axes(mesh)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             dtype=PARAM_DTYPE))
+    shardings = SH.cache_shardings(mesh, cache, cfg, worker_axes=wa)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache, shardings)
+
+
+def gossip_struct(cfg: ModelConfig, mesh, gcfg: GossipConfig):
+    p_struct = params_struct(cfg, mesh, train=True)
+    state = jax.eval_shape(lambda p: init_gossip_state(p, gcfg), p_struct)
+    # buffer shards like params; idx/step replicated
+    buf_shard = jax.tree.map(lambda s: s.sharding, p_struct)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def attach(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return type(state)(
+        buf=jax.tree.map(attach, state.buf, buf_shard),
+        buf_idx=attach(state.buf_idx, rep),
+        step=attach(state.step, rep))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                gcfg: GossipConfig | None = None) -> dict:
+    """Everything a step function needs, as sharded ShapeDtypeStructs."""
+    gcfg = gcfg or GossipConfig()
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+    if shape.kind == "train":
+        return {
+            "params": params_struct(cfg, mesh, train=True),
+            "gossip": gossip_struct(cfg, mesh, gcfg),
+            "opt": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+            "batch": batch_struct(cfg, shape, mesh, train=True),
+            "key": key,
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": params_struct(cfg, mesh, train=False),
+            "batch": batch_struct(cfg, shape, mesh, train=False),
+        }
+    # decode
+    wa = data_axes(mesh)
+    import math as _math
+    w_size = _math.prod(mesh.shape[a] for a in wa)
+    tok_spec = (jax.sharding.PartitionSpec(wa)
+                if shape.global_batch % w_size == 0
+                else jax.sharding.PartitionSpec(None))
+    tok = jax.ShapeDtypeStruct(
+        (shape.global_batch,), jnp.int32,
+        sharding=jax.sharding.NamedSharding(mesh, tok_spec))
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+    return {
+        "params": params_struct(cfg, mesh, train=False),
+        "token": tok,
+        "pos": pos,
+        "cache": cache_struct(cfg, shape, mesh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
+                    gcfg: GossipConfig | None = None,
+                    acfg: ASGDConfig | None = None, remat=True,
+                    spmd_axes=None):
+    """Returns step(params, gossip, opt_state, batch, key)
+            -> (params, gossip, opt_state, metrics).
+
+    algo: 'asgd' (paper) | 'silent' (SimuParallelSGD) | 'sync' (BATCH).
+    inner: 'sgd' (paper-faithful) | 'momentum' | 'adam' — beyond-paper
+      inner optimizers; the gossip blends PARAMS only, never optimizer
+      moments (cross-worker moment mixing is known-unstable). The inner
+      optimizer produces the update direction dw fed to eq. (6) as
+      Delta_M, so  w <- w - eps*(attraction + dw)  holds for all of them.
+    spmd_axes: mesh axes the worker-vmap dim is sharded over — lets
+      sharding hints inside the per-worker model (seq_parallel, MoE
+      dispatch) compose with the vmap.
+    """
+    from ..optim import (adam_update, momentum_update)
+
+    gcfg = gcfg or GossipConfig()
+    acfg = acfg or ASGDConfig(eps=0.01)
+
+    def per_worker_loss(p, b):
+        return M.loss_fn(cfg, p, b, remat=remat)
+
+    vmap_kw = {}
+    if spmd_axes:
+        vmap_kw["spmd_axis_name"] = spmd_axes
+
+    def direction(params, grads, opt_state):
+        """(dw, new_opt_state): w - eps*dw is the inner-optimizer step."""
+        if inner == "sgd":
+            return grads, opt_state
+        if inner == "momentum":
+            new_p, new_s = momentum_update(params, grads, opt_state,
+                                           acfg.eps)
+            dw = jax.tree.map(lambda w, n: (w - n) / acfg.eps,
+                              params, new_p)
+            return dw, new_s
+        new_p, new_s = adam_update(params, grads, opt_state, acfg.eps)
+        dw = jax.tree.map(lambda w, n: (w - n) / acfg.eps, params, new_p)
+        return dw, new_s
+
+    def step(params, gossip, opt_state, batch, key):
+        loss, grads = jax.vmap(jax.value_and_grad(per_worker_loss),
+                               **vmap_kw)(params, batch)
+        dw, opt_state = direction(params, grads, opt_state)
+        if algo == "sync":
+            new_params = sync_dp_apply(params, dw, acfg.eps)
+            new_gossip = gossip
+            metrics = {"loss": jnp.mean(loss)}
+        elif algo == "silent":
+            new_params = local_sgd_apply(params, dw, acfg.eps)
+            new_gossip = gossip
+            metrics = {"loss": jnp.mean(loss)}
+        else:
+            new_params, new_gossip, gm = asgd_gossip_apply(
+                params, dw, gossip, key, gcfg, acfg)
+            metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
+                       "gate": gm["gate"]}
+        return new_params, new_gossip, opt_state, metrics
+
+    return step
+
+
+def init_inner_state(params, inner="sgd"):
+    from ..optim import adam_init, momentum_init
+    if inner == "sgd":
+        return jnp.int32(0)  # stateless placeholder
+    if inner == "momentum":
+        return momentum_init(params)
+    return adam_init(params)
+
+
+def make_prefill_step(cfg: ModelConfig):
+    import dataclasses as _dc
+    # serve batches shard over `data`; batch-sharded attention is a
+    # train-path optimization (worker-local batch over `model`)
+    cfg = _dc.replace(cfg, attn_batch_shard=False, seq_parallel=False)
+
+    def step(params, batch):
+        last_logits, cache = M.prefill(cfg, params, batch)
+        return last_logits, cache
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    import dataclasses as _dc
+    cfg = _dc.replace(cfg, attn_batch_shard=False, seq_parallel=False)
+
+    def step(params, token, pos, cache):
+        return M.decode_step(cfg, params, token, pos, cache)
+    return step
+
+
+def step_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  gcfg: GossipConfig | None = None, algo="asgd"):
+    """(callable, kwargs-of-ShapeDtypeStructs) for jit().lower(**kwargs)."""
+    specs = input_specs(cfg, shape, mesh, gcfg)
+    if shape.kind == "train":
+        wa = data_axes(mesh)
+        fn = make_train_step(cfg, algo=algo, gcfg=gcfg,
+                             spmd_axes=wa if len(wa) > 1 else wa[0])
+        return fn, specs  # params, gossip, batch, key
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg), specs
+    return make_decode_step(cfg), specs

@@ -1,0 +1,130 @@
+"""CLI trainer: ASGD (paper) / SimuParallelSGD / sync-BATCH on any
+assigned architecture.
+
+Examples (CPU-host scale):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \\
+      --reduced --steps 50 --algo asgd --workers 4 --batch 2 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \\
+      --reduced --steps 20 --algo sync
+
+On a real TPU slice, drop --reduced and pass --mesh single|multi to shard
+over the production mesh (the same code path the dry-run compiles).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import load_checkpoint, save_checkpoint
+from ..configs.registry import get_arch
+from ..core.asgd import ASGDConfig
+from ..core.gossip import GossipConfig, final_average, init_gossip_state
+from ..data.synthetic import lm_batch_iterator
+from ..models import model as M
+from .steps import make_train_step
+
+
+def stack_batches(it, workers):
+    """Pull one host batch per worker and stack along the W axis."""
+    bs = [next(it) for _ in range(workers)]
+    return {k: jnp.stack([jnp.asarray(b[k]) for b in bs]) for k in bs[0]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant of the arch (CPU)")
+    ap.add_argument("--algo", default="asgd",
+                    choices=["asgd", "silent", "sync"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--workers", type=int, default=4,
+                    help="ASGD worker groups (W axis)")
+    ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--eps", type=float, default=0.05)
+    ap.add_argument("--inner", default="sgd",
+                    choices=["sgd", "momentum", "adam"],
+                    help="inner optimizer under the ASGD gossip "
+                         "(paper: sgd)")
+    ap.add_argument("--partial-blocks", type=int, default=4)
+    ap.add_argument("--delay", type=int, default=1)
+    ap.add_argument("--elastic", action="store_true",
+                    help="beyond-paper elastic blending")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None, help="checkpoint path")
+    ap.add_argument("--restore", default=None,
+                    help="resume from checkpoint (paper §4: early-"
+                         "terminated runs restart from w_0)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.key(args.seed)
+
+    params = M.init_model(cfg, key)
+    W = args.workers
+    wparams = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (W,) + x.shape).copy(), params)
+    gcfg = GossipConfig(
+        shifts=tuple(s for s in (1, 2, 4, 8) if s < max(W, 2)),
+        partial_blocks=args.partial_blocks, delay=args.delay)
+    acfg = ASGDConfig(eps=args.eps, elastic=args.elastic)
+    gossip = init_gossip_state(wparams, gcfg)
+    from .steps import init_inner_state
+    state = {"params": wparams, "gossip": gossip,
+             "opt": init_inner_state(wparams, args.inner),
+             "step": jnp.int32(0)}
+    if args.restore:
+        state = load_checkpoint(args.restore, state)
+        print(f"restored step={int(state['step'])} from {args.restore}")
+
+    step_fn = jax.jit(make_train_step(cfg, algo=args.algo, gcfg=gcfg,
+                                      acfg=acfg, inner=args.inner))
+    its = [lm_batch_iterator(
+        args.seed * 1000 + w, args.batch, args.seq, cfg.vocab,
+        frontend=cfg.frontend, d_model=cfg.d_model,
+        encoder_seq=cfg.encoder_seq, prefix_len=cfg.prefix_len)
+        for w in range(W)]
+
+    def next_wbatch():
+        bs = [next(it) for it in its]
+        return {k: jnp.stack([jnp.asarray(b[k]) for b in bs])
+                for k in bs[0]}
+
+    t0 = time.time()
+    losses = []
+    for step in range(int(state["step"]), args.steps):
+        batch = next_wbatch()
+        state["params"], state["gossip"], state["opt"], metrics = step_fn(
+            state["params"], state["gossip"], state["opt"], batch,
+            jax.random.fold_in(key, step))
+        state["step"] = jnp.int32(step + 1)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            extra = ""
+            if "n_good" in metrics:
+                extra = f" good_msgs={float(metrics['n_good']):.0f}"
+            print(f"step {step:5d} loss {losses[-1]:.4f}"
+                  f" ({time.time() - t0:.1f}s){extra}", flush=True)
+
+    # final aggregate (paper §4.3: optional MapReduce step; C5 says the
+    # first worker's model is usually just as good)
+    avg = final_average(state["params"])
+    first_loss = losses[-1]
+    print(f"final: last-loss={first_loss:.4f} "
+          f"(start {losses[0]:.4f})", flush=True)
+    if args.save:
+        save_checkpoint(args.save, state)
+        print(f"saved -> {args.save}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

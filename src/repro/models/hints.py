@@ -1,0 +1,47 @@
+"""Mesh-agnostic sharding hints for model internals.
+
+Model code must run identically (a) unsharded on one CPU device (smoke
+tests, examples), (b) under jit with the production mesh ambient
+(dry-run / real training). ``constrain`` applies
+``with_sharding_constraint`` only when a named mesh is ambient and only
+with axis names that exist on it; otherwise it is an exact no-op.
+
+Under vmap (the ASGD worker axis), the spec is automatically padded with a
+leading None for the batched dimension by jax's batching rule.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axis_names():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if mesh is None:
+        return ()
+    return tuple(mesh.axis_names or ())
+
+
+def _axis_ok(a, names):
+    if a is None:
+        return True
+    if isinstance(a, (tuple, list)):
+        return all(b in names for b in a)
+    return a in names
+
+
+def constrain(x, *spec):
+    """Best-effort with_sharding_constraint; no-op without an ambient mesh."""
+    names = _ambient_axis_names()
+    if not names:
+        return x
+    clean = tuple(a if _axis_ok(a, names) else None for a in spec)
+    if all(a is None for a in clean):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*clean))
+    except Exception:
+        return x

@@ -1,0 +1,40 @@
+"""Dense gated MLP (GLU family) — the FFN of every non-MoE assigned arch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation, dense_init
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], (d_model, d_ff), in_axis=0, dtype=dtype),
+        "up": dense_init(ks[1], (d_model, d_ff), in_axis=0, dtype=dtype),
+        "down": dense_init(ks[2], (d_ff, d_model), in_axis=0, dtype=dtype),
+    }
+
+
+def apply_mlp(params, x, act="silu"):
+    f = activation(act)
+    h = f(jnp.einsum("bsd,df->bsf", x, params["gate"])) \
+        * jnp.einsum("bsd,df->bsf", x, params["up"])
+    return jnp.einsum("bsf,fd->bsd", h, params["down"])
+
+
+def init_mlp_nonglu(key, d_model, d_ff, dtype=jnp.float32):
+    """Plain 2-matrix FFN (whisper-style)."""
+    ks = jax.random.split(key, 2)
+    return {
+        "up": dense_init(ks[0], (d_model, d_ff), in_axis=0, dtype=dtype),
+        "up_b": jnp.zeros((d_ff,), dtype),
+        "down": dense_init(ks[1], (d_ff, d_model), in_axis=0, dtype=dtype),
+        "down_b": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp_nonglu(params, x, act="gelu"):
+    f = activation(act)
+    h = f(jnp.einsum("bsd,df->bsf", x, params["up"]) + params["up_b"])
+    return jnp.einsum("bsf,fd->bsd", h, params["down"]) + params["down_b"]

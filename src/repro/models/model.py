@@ -1,0 +1,334 @@
+"""Full model assembly: embedding -> scanned layer stack -> head.
+
+Layer stacking: the config's ``pattern_cycle`` (e.g. (R,R,L) for
+recurrentgemma, (L,L,L,L,L,G) for gemma-3) is tiled over n_layers. All full
+cycles are executed under ONE ``lax.scan`` whose xs are per-cycle-position
+stacked param trees — a 38-layer model compiles like a 3-layer one (this is
+what keeps the 512-device dry-run tractable). Leftover layers (n_layers %
+cycle) run unscanned as the tail.
+
+Entry points:
+  init_model     — materialized params (smoke / examples scale)
+  forward/loss   — full-sequence train path (optionally remat'd)
+  prefill        — forward + decode-cache construction
+  init_cache / decode_step — single-token serving path
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .blocks import (apply_layer, apply_layer_decode, init_layer,
+                     init_layer_cache)
+from .common import dense_init, embed_init, make_norm
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def cycle_structure(cfg: ModelConfig):
+    """(cycle, n_full_cycles, tail_types)."""
+    c = len(cfg.pattern_cycle)
+    n_full = cfg.n_layers // c
+    tail = tuple(cfg.pattern_cycle[: cfg.n_layers - n_full * c])
+    return cfg.pattern_cycle, n_full, tail
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _use_abs_pos(cfg: ModelConfig) -> bool:
+    return (not cfg.use_rope) and any(
+        t in ("G", "L", "E") for t in cfg.pattern_cycle)
+
+
+def sinusoidal(seq, d, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg: ModelConfig, key, dtype=jnp.float32):
+    cycle, n_full, tail = cycle_structure(cfg)
+    ks = jax.random.split(key, 8)
+    norm_init, _ = make_norm(cfg.norm_type)
+    params = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype),
+        "final_norm": norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[1], (cfg.d_model, cfg.padded_vocab), in_axis=0, dtype=dtype)
+
+    scan = {}
+    for j, ltype in enumerate(cycle):
+        layers = [
+            init_layer(jax.random.fold_in(ks[2], i * len(cycle) + j),
+                       cfg, ltype, dtype=dtype)
+            for i in range(n_full)
+        ]
+        scan[f"pos{j}"] = _tree_stack(layers)
+    params["scan"] = scan
+    params["tail"] = {
+        f"t{j}": init_layer(jax.random.fold_in(ks[3], 10_000 + j),
+                            cfg, ltype, dtype=dtype)
+        for j, ltype in enumerate(tail)
+    }
+
+    if cfg.encoder_layers:
+        enc_layers = [
+            init_layer(jax.random.fold_in(ks[4], j), cfg, "E",
+                       is_decoder=False, dtype=dtype)
+            for j in range(cfg.encoder_layers)
+        ]
+        params["encoder"] = {
+            "scan": _tree_stack(enc_layers),
+            "final_norm": norm_init(cfg.d_model, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper) — the stub frontend supplies frame embeddings
+# ---------------------------------------------------------------------------
+
+def run_encoder(cfg: ModelConfig, params, frames):
+    """frames: (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    _, norm = make_norm(cfg.norm_type)
+    x = frames + sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1]), frames.shape[:2])
+
+    def body(x, p):
+        x, _, _ = apply_layer(cfg, "E", p, x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["scan"])
+    return norm(params["encoder"]["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _embed_inputs(cfg, params, batch):
+    """Returns (x (B,S,D), positions (B,S), prefix_len, enc_out)."""
+    enc_out = None
+    if cfg.frontend == "audio":
+        enc_out = run_encoder(cfg, params, batch["frames"])
+        x = embed_tokens(cfg, params, batch["tokens"])
+    elif cfg.frontend == "vision":
+        x_txt = embed_tokens(cfg, params, batch["tokens"])
+        x = jnp.concatenate(
+            [batch["patches"].astype(x_txt.dtype), x_txt], axis=1)
+    else:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    S = x.shape[1]
+    if _use_abs_pos(cfg):
+        x = x + sinusoidal(S, cfg.d_model, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S))
+    prefix = cfg.prefix_len if cfg.frontend == "vision" else 0
+    return x, positions, prefix, enc_out
+
+
+def forward(cfg: ModelConfig, params, batch, *, remat=True,
+            return_cache=False, cache_len=None):
+    """Returns (logits (B,S,V), aux) or, with return_cache,
+    (logits, aux, cache)."""
+    cycle, n_full, tail = cycle_structure(cfg)
+    x, positions, prefix, enc_out = _embed_inputs(cfg, params, batch)
+
+    def cycle_body(carry, xs):
+        x, aux = carry
+        caches = []
+        for j, ltype in enumerate(cycle):
+            x, a, c = apply_layer(
+                cfg, ltype, xs[f"pos{j}"], x, positions,
+                enc_out=enc_out, prefix_len=prefix,
+                return_cache=return_cache, cache_len=cache_len)
+            aux = aux + a
+            caches.append(c)
+        out = tuple(caches) if return_cache else None
+        return (x, aux), out
+
+    def maybe_remat(body_fn):
+        if not remat or return_cache or cfg.remat_policy == "none":
+            return body_fn
+        if cfg.remat_policy == "dots":
+            return jax.checkpoint(
+                body_fn,
+                policy=jax.checkpoint_policies
+                .dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(body_fn)
+
+    if cfg.unroll_scan:
+        body = maybe_remat(cycle_body)
+        carry = (x, jnp.float32(0.0))
+        unrolled_caches = []
+        for i in range(n_full):
+            carry, out_i = body(
+                carry, jax.tree.map(lambda v: v[i], params["scan"]))
+            unrolled_caches.append(out_i)
+        (x, aux) = carry
+        scan_caches = (jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *unrolled_caches)
+                       if return_cache else None)
+    else:
+        body = maybe_remat(cycle_body)
+        (x, aux), scan_caches = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), params["scan"])
+
+    tail_caches = {}
+    for j, ltype in enumerate(tail):
+        x, a, c = apply_layer(
+            cfg, ltype, params["tail"][f"t{j}"], x, positions,
+            enc_out=enc_out, prefix_len=prefix,
+            return_cache=return_cache, cache_len=cache_len)
+        aux = aux + a
+        tail_caches[f"t{j}"] = c
+
+    _, norm = make_norm(cfg.norm_type)
+    x = norm(params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    if return_cache:
+        # scan ys: tuple (per cycle position) of caches stacked over cycles
+        cache = {"scan": {f"pos{j}": scan_caches[j]
+                          for j in range(len(cycle))},
+                 "tail": tail_caches}
+        return logits, aux, cache
+    return logits, aux
+
+
+def unembed(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask pad columns so sampling/softmax never sees them
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat=True):
+    """Next-token cross-entropy (mean over non-prefix positions) + MoE aux."""
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    tokens = batch["tokens"]
+    # with a vision prefix, only text positions carry labels
+    logits_txt = logits[:, -tokens.shape[1]:]
+    lp = jax.nn.log_softmax(logits_txt[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss + cfg.router_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch, max_seq, dtype=jnp.bfloat16):
+    cycle, n_full, tail = cycle_structure(cfg)
+    cross = cfg.encoder_seq if cfg.cross_attention else 0
+
+    def stacked(ltype):
+        one = init_layer_cache(cfg, ltype, batch, max_seq, dtype,
+                               cross_seq=cross)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_full,) + x.shape), one)
+
+    return {
+        "scan": {f"pos{j}": stacked(t) for j, t in enumerate(cycle)},
+        "tail": {f"t{j}": init_layer_cache(cfg, t, batch, max_seq, dtype,
+                                           cross_seq=cross)
+                 for j, t in enumerate(tail)},
+    }
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len=None):
+    """Full-sequence pass that also builds the decode cache.
+    Returns (last_logits (B,V), cache)."""
+    logits, _, cache = forward(cfg, params, batch, remat=False,
+                               return_cache=True, cache_len=cache_len)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params, token, pos, cache, *,
+                enc_out=None):
+    """token: (B,) int32; pos: scalar int32 (current write position).
+    Returns (logits (B,V), new_cache)."""
+    cycle, n_full, tail = cycle_structure(cfg)
+    x = embed_tokens(cfg, params, token[:, None])
+    if _use_abs_pos(cfg):
+        x = x + jax.lax.dynamic_slice_in_dim(
+            sinusoidal(cache_max_seq(cache), cfg.d_model, x.dtype),
+            pos, 1)[None]
+
+    def cycle_body(x, xs):
+        p_cyc, c_cyc = xs
+        new_caches = []
+        for j, ltype in enumerate(cycle):
+            x, nc = apply_layer_decode(
+                cfg, ltype, p_cyc[f"pos{j}"], x, pos, c_cyc[f"pos{j}"])
+            new_caches.append(nc)
+        return x, {f"pos{j}": nc for j, nc in enumerate(new_caches)}
+
+    if cfg.unroll_scan:
+        n_full_ = cycle_structure(cfg)[1]
+        outs = []
+        for i in range(n_full_):
+            x, nc = cycle_body(
+                x, (jax.tree.map(lambda v: v[i], params["scan"]),
+                    jax.tree.map(lambda v: v[i], cache["scan"])))
+            outs.append(nc)
+        new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        x, new_scan = jax.lax.scan(
+            cycle_body, x, (params["scan"], cache["scan"]))
+
+    new_tail = {}
+    for j, ltype in enumerate(tail):
+        x, nc = apply_layer_decode(
+            cfg, ltype, params["tail"][f"t{j}"], x, pos,
+            cache["tail"][f"t{j}"])
+        new_tail[f"t{j}"] = nc
+
+    _, norm = make_norm(cfg.norm_type)
+    x = norm(params["final_norm"], x)
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, {"scan": new_scan, "tail": new_tail}
+
+
+def cache_max_seq(cache) -> int:
+    """Max-seq capacity of an attention KV cache: the S axis of a 'k' leaf
+    ((..., B, S, KV, Dh) — works for scan-stacked leaves too)."""
+    paths = jax.tree_util.tree_flatten_with_path(cache)[0]
+    for path, leaf in paths:
+        keys = [getattr(p, "key", None) for p in path]
+        if "k" in keys and leaf.ndim >= 4:
+            return leaf.shape[-3]
+    return 0

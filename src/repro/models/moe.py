@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Covers phi3.5-moe (16e, top-2) and granite-moe (32e, top-8).
+
+Dispatch is capacity-based (MaxText/GShard style) rather than dense-compute:
+tokens are scattered into an (E, C, D) buffer, every expert computes only its
+capacity slice, and results gather back weighted by router probabilities.
+This keeps compiled FLOPs proportional to *active* experts — 6*N_active*D —
+so the roofline 'useful ratio' is honest; a dense-dispatch MoE would inflate
+HLO FLOPs by E/topk.
+
+With experts sharded over the mesh's `model` axis, the scatter/gather pair
+lowers to all-to-all collectives — the expert-parallel pattern the §Perf
+hillclimb iterates on. Router load-balance (aux loss + stats) included:
+gossiping replicas with unbalanced routers is exactly where ASGD's
+Parzen gate earns its keep (divergent expert assignment across workers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import activation, dense_init
+from .hints import constrain
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d_model, n_experts), in_axis=0,
+                             dtype=jnp.float32),  # router always f32
+        "gate": dense_init(ks[1], (n_experts, d_model, d_ff), in_axis=1,
+                           dtype=dtype),
+        "up": dense_init(ks[2], (n_experts, d_model, d_ff), in_axis=1,
+                         dtype=dtype),
+        "down": dense_init(ks[3], (n_experts, d_ff, d_model), in_axis=1,
+                           dtype=dtype),
+    }
+
+
+def route(params, x, topk):
+    """x: (T, D) -> (weights (T, k), idx (T, k), aux_loss, load)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, topk)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss: E * <f_e, p_e>
+    E = logits.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(1), axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * p)
+    return w.astype(x.dtype), idx, aux, f
+
+
+def _blocked_cumsum(x, blk=4096):
+    """Exact two-level inclusive cumsum along axis 0.
+
+    XLA lowers a monolithic jnp.cumsum over millions of rows to a
+    reduce-window whose modeled (and CPU-executed) cost is QUADRATIC in n —
+    measured 1.4e14 flops/chip on granite prefill_32k, 300x the entire
+    rest of the layer (EXPERIMENTS.md §Perf granite iteration 2). Two-level
+    blocking makes it n*blk: cumsum within blocks + cumsum of block totals.
+    """
+    n, e = x.shape
+    if n <= blk:
+        return jnp.cumsum(x, axis=0)
+    nb = -(-n // blk)
+    pad = nb * blk - n
+    xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(nb, blk, e)
+    within = jnp.cumsum(xb, axis=1)                     # (nb, blk, E)
+    totals = within[:, -1]                              # (nb, E)
+    offsets = jnp.cumsum(totals, axis=0) - totals       # exclusive
+    out = (within + offsets[:, None, :]).reshape(nb * blk, e)
+    return out[:n]
+
+
+def _dispatch_group(params, xt, topk, act, C):
+    """Capacity dispatch for ONE token group. xt: (Tg, D)."""
+    Tg, D = xt.shape
+    E = params["router"].shape[-1]
+    w, idx, aux, _ = route(params, xt, topk)           # (Tg,k)
+
+    # position of each (token, slot) within its expert queue
+    flat_e = idx.reshape(-1)                            # (Tg*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (Tg*k, E)
+    pos_in_e = _blocked_cumsum(onehot) - 1               # running count
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C                                       # overflow dropped
+
+    # scatter tokens into (E, C, D)
+    buf = jnp.zeros((E, C, D), xt.dtype)
+    tok_ids = jnp.repeat(jnp.arange(Tg), topk)
+    e_safe = jnp.where(keep, flat_e, 0)
+    p_safe = jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[:, None], xt[tok_ids], 0.0)
+    buf = buf.at[e_safe, p_safe].add(contrib)
+
+    # expert FFN on capacity slices: (E, C, D) x (E, D, F)
+    f = activation(act)
+    h = f(jnp.einsum("ecd,edf->ecf", buf, params["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["down"])
+
+    # gather back, weighted
+    gathered = out_buf[e_safe, p_safe]                  # (Tg*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    wt = w.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jnp.zeros((Tg, D), gathered.dtype).at[tok_ids].add(gathered * wt)
+    return y, aux
+
+
+def apply_moe(params, x, topk, act="silu", capacity_factor=1.25,
+              dispatch_groups=1):
+    """x: (B, S, D) -> (y, aux_loss). Capacity-based dispatch.
+
+    dispatch_groups g > 1 splits tokens into g independent dispatch groups
+    (vmapped). With tokens batch-sharded over the mesh's data axis and
+    g == |data|, each group's (E, C/g, D) buffer stays shard-local: the
+    monolithic dispatch otherwise materializes a REPLICATED capacity buffer
+    whose scatter-add all-reduces ~|buf| bytes per layer (measured 258
+    GB/step on granite prefill_32k — EXPERIMENTS.md §Perf iteration 3).
+    Capacity semantics change slightly (per-group overflow), matching how
+    expert-parallel systems shard dispatch in practice.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E = params["router"].shape[-1]
+    g = dispatch_groups if T % dispatch_groups == 0 else 1
+    Tg = T // g
+    C = max(1, int(capacity_factor * Tg * topk / E))
+    xg = x.reshape(g, Tg, D)
+    y, aux = jax.vmap(
+        lambda xt: _dispatch_group(params, xt, topk, act, C))(xg)
+    return y.reshape(B, S, D), jnp.mean(aux)
+
+
+def apply_moe_decode(params, x, topk, act="silu"):
+    """Decode path: T is tiny (B tokens). Uses the same capacity dispatch
+    as the full-sequence path: a per-token weight gather (the obvious
+    alternative) pulls B*k*(3*D*F) expert-weight bytes across the mesh
+    every step — measured 3.2 GB/layer on granite decode_32k
+    (EXPERIMENTS.md §Perf) — whereas dispatch moves only B*k*D token
+    bytes and keeps expert weights sharded in place."""
+    B, _, D = x.shape
+    xt = x.reshape(B, D)
+    E = params["router"].shape[-1]
+    C = max(1, -(-B * topk // E) * 2)  # generous: decode drops nothing
+    y, _ = _dispatch_group(params, xt, topk, act, C)
+    return y.reshape(B, 1, D), jnp.float32(0.0)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) — arXiv:2402.19427.
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = a ^ (c * r_t),  a = sigmoid(Lambda)  (per-channel learnt decay)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Linear recurrence with input-dependent coefficients -> parallelized with
+jax.lax.associative_scan (log-depth, TPU-friendly) for train/prefill, O(1)
+state update for decode. The full Griffin block is conv1d + RG-LRU on one
+branch, GeLU gate on the other, merged multiplicatively.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+_C = 8.0  # paper's fixed exponent scale
+
+
+def init_rglru(key, d_model, lru_width, conv_width=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999] (paper)
+    u = jax.random.uniform(ks[0], (lru_width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "in_x": dense_init(ks[1], (d_model, lru_width), in_axis=0,
+                           dtype=dtype),
+        "in_gate": dense_init(ks[2], (d_model, lru_width), in_axis=0,
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, lru_width))
+                   / math.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((lru_width,), dtype),
+        "w_a": dense_init(ks[4], (lru_width, lru_width), in_axis=0,
+                          dtype=dtype),
+        "b_a": jnp.zeros((lru_width,), dtype),
+        "w_x": dense_init(ks[5], (lru_width, lru_width), in_axis=0,
+                          dtype=dtype),
+        "b_x": jnp.zeros((lru_width,), dtype),
+        "Lambda": lam.astype(jnp.float32),
+        "out": dense_init(ks[6], (lru_width, d_model), in_axis=0,
+                          dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def _rg_lru_coeffs(params, x):
+    """x: (B,S,W) post-conv. Returns per-step (a_t, b_t) of the linear
+    recurrence h = a*h + b, computed in f32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x32,
+                                  params["w_a"].astype(jnp.float32))
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x32,
+                                  params["w_x"].astype(jnp.float32))
+                       + params["b_x"].astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(params["Lambda"])       # log a
+    log_a = _C * r * log_a_base[None, None, :]              # a^(c r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return a, b
+
+
+def rg_lru_scan(a, b, h0=None):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (sequence).
+
+    a, b: (B,S,W). h0: optional initial state (B,W)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(params, x_in):
+    """Full Griffin recurrent block. x_in: (B,S,D) -> (y, final_state)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_in, params["in_gate"]))
+    x = jnp.einsum("bsd,dw->bsw", x_in, params["in_x"])
+    x = _causal_conv(x, params["conv_w"], params["conv_b"])
+    a, b = _rg_lru_coeffs(params, x)
+    h = rg_lru_scan(a, b)                                   # (B,S,W) f32
+    y = (h.astype(x_in.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return out, h[:, -1]
+
+
+def init_rglru_cache(batch, lru_width, conv_width=4, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+    }
+
+
+def apply_rglru_decode(params, x_in, cache):
+    """Single-token decode. x_in: (B,1,D)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x_in, params["in_gate"]))
+    x = jnp.einsum("bsd,dw->bsw", x_in, params["in_x"])[:, 0]  # (B,W)
+    conv_buf = jnp.concatenate([cache["conv"], x[:, None]], axis=1)
+    x = jnp.einsum("bkc,kc->bc", conv_buf, params["conv_w"]) \
+        + params["conv_b"]
+    a, b = _rg_lru_coeffs(params, x[:, None])
+    h = a[:, 0] * cache["h"] + b[:, 0]                      # (B,W)
+    y = (h[:, None].astype(x_in.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["out"])
+    return out, {"conv": conv_buf[:, 1:], "h": h}

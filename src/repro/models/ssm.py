@@ -1,0 +1,225 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+The sequence mixer of mamba2-370m. Forward uses the chunked SSD form:
+intra-chunk terms are attention-like matmuls (MXU-friendly), inter-chunk
+state is carried by a short sequential scan over chunks — O(S) work, O(S/Q)
+sequential depth. A naive per-step lax.scan over 32k-524k steps is exactly
+what XLA lowers badly (524k trivially-small HLO loop iterations); the chunked
+form is the TPU-native adaptation, and repro/kernels/ssd_scan tightens the
+same computation into a Pallas kernel.
+
+Shapes (per layer): x (B,S,H,P) heads*headdim = d_inner; B,C (B,S,G,N) with
+G=1 state group broadcast over heads; dt (B,S,H); A (H,) < 0.
+
+Recurrence:   h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t ⊗ x_t);   y_t = C_t·h_t + D x_t
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rmsnorm
+
+
+def init_ssd(key, d_model, *, expand=2, head_dim=64, state=128, n_groups=1,
+             conv_width=4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * n_groups * state
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * n_groups * state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], (d_model, d_proj), in_axis=0,
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_ch))
+                   / math.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": {"scale": jnp.zeros((d_inner,), dtype)},
+        "out_proj": dense_init(ks[3], (d_inner, d_model), in_axis=0,
+                               dtype=dtype),
+    }
+
+
+def _split_proj(proj, d_inner, n_groups, state, n_heads):
+    zs = d_inner
+    xs = d_inner
+    bs = n_groups * state
+    cs = n_groups * state
+    z, x, B, C, dt = jnp.split(
+        proj, [zs, zs + xs, zs + xs + bs, zs + xs + bs + cs], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # unrolled K-tap FIR: K is 4 — cheaper to express than conv_general
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b
+
+
+def ssd_chunked(x, dt, A, B, C, chunk):
+    """Chunked SSD scan (pure jnp oracle; the Pallas kernel mirrors this).
+
+    x: (B,S,H,P) pre-multiplied by nothing (dt applied inside);
+    dt: (B,S,H) positive; A: (H,) negative; B,C: (B,S,G,N) with G==1.
+    Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    Bm = jnp.broadcast_to(B[:, :, 0:1, :], (Bb, S, 1, N))[:, :, 0]  # (B,S,N)
+    Cm = jnp.broadcast_to(C[:, :, 0:1, :], (Bb, S, 1, N))[:, :, 0]
+
+    xc = x.reshape(Bb, nc, chunk, H, P)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = Bm.reshape(Bb, nc, chunk, N)
+    Cc = Cm.reshape(Bb, nc, chunk, N)
+
+    # per-step log decay a_t = dt_t * A  (A<0)
+    la = dtc * A[None, None, None, :]                       # (B,nc,Q,H)
+    # inclusive cumsum within chunk
+    lcum = jnp.cumsum(la, axis=2)                           # L_i
+    ltot = lcum[:, :, -1:, :]                               # chunk decay
+
+    # intra-chunk: Y_ij = (C_i . B_j) * exp(L_i - L_j) * dt_j x_j , j<=i
+    cb = jnp.einsum("bnik,bnjk->bnij", Cc, Bc)              # (B,nc,Q,Q)
+    li = lcum[:, :, :, None, :]                             # (B,nc,Q,1,H)
+    lj = lcum[:, :, None, :, :]                             # (B,nc,1,Q,H)
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))          # (B,nc,Q,Q,H)
+    idx = jnp.arange(chunk)
+    tri = (idx[:, None] >= idx[None, :]).astype(decay.dtype)
+    gamma = cb[..., None] * decay * tri[None, None, :, :, None]
+    xdt = xc * dtc[..., None]                               # dt_j x_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", gamma, xdt)
+
+    # chunk-final partial state: S_c = sum_j exp(Ltot - L_j) B_j ⊗ xdt_j
+    sdecay = jnp.exp(jnp.clip(ltot - lcum, -60.0, 0.0))     # (B,nc,Q,H)
+    s_c = jnp.einsum("bnjk,bnjh,bnjhp->bnhkp", Bc, sdecay, xdt)
+
+    # inter-chunk scan: H_c = exp(ltot_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(jnp.clip(ltot[:, :, 0, :], -60.0, 0.0))  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        dec, s = inp                                        # (B,H), (B,H,N,P)
+        h_next = h * dec[..., None, None] + s
+        return h_next, h                                    # emit PRE-state
+
+    h0 = jnp.zeros((Bb, H, N, P), x.dtype)
+    h_last, h_pre = jax.lax.scan(
+        scan_fn,
+        h0,
+        (chunk_decay.transpose(1, 0, 2), s_c.transpose(1, 0, 2, 3, 4)))
+    h_pre = h_pre.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,N,P)
+
+    # inter contribution: Y_i += exp(L_i) C_i . H_{c-1}
+    in_decay = jnp.exp(jnp.clip(lcum, -60.0, 0.0))          # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnik,bnhkp,bnih->bnihp", Cc, h_pre, in_decay)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, h_last
+
+
+def ssd_reference(x, dt, A, B, C):
+    """Naive sequential recurrence — the correctness oracle for tests."""
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    Bm = B[:, :, 0]
+    Cm = C[:, :, 0]
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t] * A[None, :])                  # (B,H)
+        upd = jnp.einsum("bk,bhp->bhkp", Bm[:, t],
+                         x[:, t] * dt[:, t][..., None])
+        h = h * a[..., None, None] + upd
+        y = jnp.einsum("bk,bhkp->bhp", Cm[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), x.dtype)
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def apply_ssd(params, x_in, *, chunk=64, head_dim=64, state=128, n_groups=1):
+    """Full mamba-2 mixer: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    x_in: (B,S,D). Returns (y (B,S,D), final_state) — final_state feeds
+    incremental decoding.
+    """
+    Bb, S, D = x_in.shape
+    d_inner = params["out_proj"].shape[0]
+    H = d_inner // head_dim
+    proj = jnp.einsum("bsd,de->bse", x_in, params["in_proj"])
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, n_groups, state, H)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_groups * state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])               # (B,S,H)
+    A = -jnp.exp(params["A_log"])                           # (H,) < 0
+    xh = x.reshape(Bb, S, H, head_dim)
+    Bh = Bm.reshape(Bb, S, n_groups, state)
+    Ch = Cm.reshape(Bb, S, n_groups, state)
+
+    y, h_last = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                            Bh.astype(jnp.float32), Ch.astype(jnp.float32),
+                            chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bb, S, d_inner).astype(x_in.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    conv_tail = jnp.concatenate([x, Bm, Cm], axis=-1)  # post-conv (unused)
+    return out, h_last
+
+
+def init_ssd_cache(batch, d_model, *, expand=2, head_dim=64, state=128,
+                   n_groups=1, conv_width=4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    conv_ch = d_inner + 2 * n_groups * state
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, state, head_dim), jnp.float32),
+    }
+
+
+def apply_ssd_decode(params, x_in, cache, *, head_dim=64, state=128,
+                     n_groups=1):
+    """Single-token decode: O(1) in sequence length (the reason mamba2 runs
+    the long_500k shape). x_in: (B,1,D)."""
+    Bb = x_in.shape[0]
+    d_inner = params["out_proj"].shape[0]
+    H = d_inner // head_dim
+    proj = jnp.einsum("bsd,de->bse", x_in, params["in_proj"])[:, 0]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, n_groups, state, H)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)            # (B,C)
+    conv_buf = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
+    w = params["conv_w"]
+    y_conv = jnp.einsum("bkc,kc->bc", conv_buf, w) + params["conv_b"]
+    xbc = jax.nn.silu(y_conv)
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + n_groups * state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])                            # (B,H)
+    xh = x.reshape(Bb, H, head_dim).astype(jnp.float32)
+    Bv = Bm.reshape(Bb, n_groups, state)[:, 0].astype(jnp.float32)
+    Cv = Cm.reshape(Bb, n_groups, state)[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bk,bhp->bhkp", Bv, xh * dt[..., None])
+    h = cache["ssm"] * a[..., None, None] + upd
+    y = jnp.einsum("bk,bhkp->bhp", Cv, h)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bb, 1, d_inner).astype(x_in.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None]))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, {"conv": conv_buf[:, 1:], "ssm": h}

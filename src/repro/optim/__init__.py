@@ -1,0 +1,2 @@
+from .optimizers import (adam_init, adam_update, momentum_init,
+                         momentum_update, sgd_update, lr_schedule)

@@ -1,0 +1,65 @@
+"""Inner optimizers.
+
+The paper's ASGD is plain SGD + gossip; the framework also offers momentum
+and Adam as *inner* optimizers under the same gossip wrapper (beyond-paper:
+gossip blends params only, never optimizer state — blending Adam moments
+across workers is known-unstable). All are pytree-polymorphic and carry the
+worker axis transparently (state leaves mirror param leaves)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_update(params, grads, lr):
+    return jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
+                        params, grads)
+
+
+def momentum_init(params):
+    return jax.tree.map(lambda w: jnp.zeros_like(w, dtype=jnp.float32),
+                        params)
+
+
+def momentum_update(params, grads, state, lr, beta=0.9):
+    new_state = jax.tree.map(
+        lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+    new_params = jax.tree.map(
+        lambda w, m: w - lr * m.astype(w.dtype), params, new_state)
+    return new_params, new_state
+
+
+def adam_init(params):
+    z = lambda w: jnp.zeros_like(w, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.int32(0)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new_params = jax.tree.map(
+        lambda w, m_, v_: w - (lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + eps)).astype(w.dtype),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(kind, base_lr, warmup=100, total=10_000):
+    """Returns step -> lr. 'const' | 'cosine' | 'linear'."""
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0)
+        if kind == "const":
+            return base_lr * w
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        if kind == "cosine":
+            return base_lr * w * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * w * (1 - frac)
+    return f

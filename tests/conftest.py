@@ -1,0 +1,20 @@
+"""Shared test fixtures.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device. Tests that need a
+multi-device mesh live in tests/multidevice/ which has its own conftest
+setting 8 fake devices via an early os.environ write.
+"""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.key(0)

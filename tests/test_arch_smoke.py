@@ -1,0 +1,149 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned architecture: instantiate the REDUCED variant (<=2 cycle
+layers, d_model<=256, <=4 experts — derived from the same ModelConfig via
+.reduced(), so the exact production code path is exercised) and run one
+forward + one train step + one prefill/decode step on CPU, asserting output
+shapes and finiteness. The FULL configs are exercised via the dry-run only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.asgd import ASGDConfig
+from repro.core.gossip import GossipConfig
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def make_batch(cfg, B=2, S=32, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            ks[1], (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.1 * jax.random.normal(
+            ks[1], (B, cfg.prefix_len, cfg.d_model))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init each reduced arch once per test session."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = ARCHS[name].reduced()
+            params = M.init_model(cfg, jax.random.key(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nans(self, built, name):
+        cfg, params = built(name)
+        B, S = 2, 32
+        batch = make_batch(cfg, B, S)
+        logits, aux = M.forward(cfg, params, batch, remat=False)
+        S_out = S + (cfg.prefix_len if cfg.frontend == "vision" else 0)
+        assert logits.shape == (B, S_out, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert bool(jnp.isfinite(aux))
+
+    def test_train_step_descends_and_finite(self, built, name):
+        """One ASGD train step (W=2 worker axis) — loss finite, params move,
+        no NaNs anywhere in the tree."""
+        cfg, params = built(name)
+        W, B, S = 2, 1, 32
+        batch = make_batch(cfg, B, S)
+        wparams = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (W,) + x.shape), params)
+        wbatch = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (W,) + x.shape), batch)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=2)
+        from repro.core.gossip import init_gossip_state
+        from repro.launch.steps import init_inner_state
+        gossip = init_gossip_state(wparams, gcfg)
+        step = make_train_step(cfg, algo="asgd", gcfg=gcfg,
+                               acfg=ASGDConfig(eps=1e-2), remat=True)
+        new_params, new_gossip, _, metrics = step(
+            wparams, gossip, init_inner_state(wparams), wbatch,
+            jax.random.key(1))
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert all(bool(jnp.all(jnp.isfinite(x)))
+                   for x in jax.tree.leaves(new_params))
+        moved = any(
+            float(jnp.max(jnp.abs(a - b))) > 0
+            for a, b in zip(jax.tree.leaves(new_params),
+                            jax.tree.leaves(wparams)))
+        assert moved, "train step must change params"
+
+    def test_prefill_decode_consistency(self, built, name):
+        """Greedy decode from a prefilled cache must match teacher-forced
+        forward logits position-by-position (validates every cache path)."""
+        cfg, params = built(name)
+        B, S = 2, 16
+        batch = make_batch(cfg, B, S)
+        S_total = S + (cfg.prefix_len if cfg.frontend == "vision" else 0)
+        logits, _ = M.forward(cfg, params, batch, remat=False)
+        last, cache = M.prefill(cfg, params, batch, cache_len=S_total + 4)
+        np.testing.assert_allclose(
+            np.asarray(last), np.asarray(logits[:, -1]),
+            rtol=3e-2, atol=3e-3)
+        # one decode step
+        tok = jnp.zeros((B,), jnp.int32)
+        pos = jnp.int32(S + (cfg.prefix_len
+                             if cfg.frontend == "vision" else 0))
+        lg, new_cache = M.decode_step(cfg, params, tok, pos, cache)
+        assert lg.shape == (B, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(lg)))
+
+    def test_param_count_analytic_close(self, built, name):
+        cfg, params = built(name)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        n_analytic = cfg.param_count()
+        # analytic misses small norms/biases only
+        assert abs(n - n_analytic) / n < 0.05, (n, n_analytic)
+
+
+class TestFullConfigs:
+    """Sanity on the production (non-reduced) config definitions."""
+
+    @pytest.mark.parametrize("name", ARCH_IDS)
+    def test_param_counts_match_model_card_scale(self, name):
+        cfg = ARCHS[name]
+        n = cfg.param_count()
+        expected = {
+            "recurrentgemma-9b": (7e9, 11e9),
+            "whisper-tiny": (2e7, 6e7),
+            "phi3.5-moe-42b-a6.6b": (38e9, 45e9),
+            "paligemma-3b": (2e9, 3.5e9),     # decoder only (SigLIP stubbed)
+            "mamba2-370m": (3e8, 4.5e8),
+            "qwen2.5-14b": (12e9, 16e9),
+            "smollm-135m": (1.2e8, 1.5e8),
+            "qwen3-14b": (12e9, 16e9),
+            "granite-moe-1b-a400m": (0.9e9, 1.6e9),
+            "gemma3-1b": (0.9e9, 1.4e9),
+        }[name]
+        assert expected[0] <= n <= expected[1], f"{name}: {n:.3e}"
+
+    @pytest.mark.parametrize("name", ARCH_IDS)
+    def test_active_params_le_total(self, name):
+        cfg = ARCHS[name]
+        assert cfg.active_param_count() <= cfg.param_count()
+        if cfg.n_experts:
+            assert cfg.active_param_count() < cfg.param_count()
+
+    def test_moe_active_fraction(self):
+        cfg = ARCHS["phi3.5-moe-42b-a6.6b"]
+        # model card: 42B total, 6.6B active
+        ratio = cfg.active_param_count() / cfg.param_count()
+        assert 0.1 < ratio < 0.25, ratio

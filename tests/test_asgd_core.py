@@ -1,0 +1,171 @@
+"""Unit + property tests for the ASGD numeric core (paper eqs. 2-7).
+
+These pin the update equations against hand-computed values and check the
+invariants the paper's §4 argues for.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ASGDConfig, asgd_update, blend_externals,
+                        empty_state_mask, parzen_gate, parzen_gate_inner)
+from repro.core.tree import tree_axpy, tree_sq_dist
+
+
+def _state(seed, shape=(4, 3)):
+    return jax.random.normal(jax.random.key(seed), shape)
+
+
+# ---------------------------------------------------------------------------
+# eq. (4) — the Parzen gate
+# ---------------------------------------------------------------------------
+
+class TestParzenGate:
+    def test_accepts_state_ahead_of_descent(self):
+        # w_j placed exactly where the local step lands -> clearly "ahead"
+        w_i = jnp.ones((2, 2))
+        dw = jnp.full((2, 2), 0.5)
+        w_j = w_i - 1.0 * dw  # far along the descent direction
+        assert parzen_gate(w_i, dw, w_j, eps=0.1) == 1.0
+
+    def test_rejects_state_behind(self):
+        w_i = jnp.ones((2, 2))
+        dw = jnp.full((2, 2), 0.5)
+        w_j = w_i + 1.0 * dw  # opposite to descent direction
+        assert parzen_gate(w_i, dw, w_j, eps=0.1) == 0.0
+
+    def test_rejects_identical_state(self):
+        # w_j == w_i: d_before = 0, stepping away can only increase distance
+        w_i = _state(0)
+        dw = _state(1)
+        assert parzen_gate(w_i, dw, w_i, eps=0.1) == 0.0
+
+    def test_hand_computed_1d(self):
+        # w_i=2, dw=1, eps=0.5 -> stepped=1.5. w_j=1: |1.5-1|<|2-1| -> accept
+        g = parzen_gate(jnp.array([2.0]), jnp.array([1.0]),
+                        jnp.array([1.0]), eps=0.5)
+        assert g == 1.0
+        # w_j=3: |1.5-3|=1.5 > |2-3|=1 -> reject
+        g = parzen_gate(jnp.array([2.0]), jnp.array([1.0]),
+                        jnp.array([3.0]), eps=0.5)
+        assert g == 0.0
+
+    @given(st.integers(0, 2**31 - 1), st.floats(1e-3, 2.0))
+    @settings(max_examples=50, deadline=None)
+    def test_expanded_form_equivalent(self, seed, eps):
+        """parzen_gate_inner (the fused-kernel identity) == direct eq. (4)."""
+        ks = jax.random.split(jax.random.key(seed), 3)
+        w_i = jax.random.normal(ks[0], (5, 4))
+        dw = jax.random.normal(ks[1], (5, 4))
+        w_j = jax.random.normal(ks[2], (5, 4))
+        a = parzen_gate(w_i, dw, w_j, eps)
+        b = parzen_gate_inner(w_i, dw, w_j, eps)
+        assert a == b
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=30, deadline=None)
+    def test_gate_invariant_admitted_means_closer(self, seed):
+        """If admitted, the post-step state is strictly closer to w_j."""
+        ks = jax.random.split(jax.random.key(seed), 3)
+        w_i = jax.random.normal(ks[0], (6,))
+        dw = jax.random.normal(ks[1], (6,))
+        w_j = jax.random.normal(ks[2], (6,))
+        eps = 0.3
+        g = parzen_gate(w_i, dw, w_j, eps)
+        stepped = tree_axpy(-eps, dw, w_i)
+        closer = tree_sq_dist(stepped, w_j) < tree_sq_dist(w_i, w_j)
+        assert bool(g) == bool(closer)
+
+
+class TestEmptyMask:
+    def test_zero_buffer_is_empty(self):
+        assert empty_state_mask(jnp.zeros((3, 3))) == 0.0
+
+    def test_nonzero_buffer_is_message(self):
+        assert empty_state_mask(jnp.zeros((3, 3)).at[0, 0].set(1e-8)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# eqs. (2)/(3)/(5)/(6) — the blend and update
+# ---------------------------------------------------------------------------
+
+class TestBlend:
+    def test_eq2_single_external_hand_computed(self):
+        """eq. (5) with gate forced open: Delta_bar = (w_i - w_j)/2 + dw."""
+        w_i = jnp.array([4.0, 1.0])
+        w_j = jnp.array([0.0, 1.0])  # nonzero state (lambda=1), ahead of descent
+        # choose dw pointing at w_j so the gate opens
+        dw = jnp.array([1.0, 0.0])
+        eps = 0.5
+        attraction, n_good = blend_externals(w_i, dw, [w_j], eps)
+        assert n_good == 1.0
+        np.testing.assert_allclose(attraction, (w_i - w_j) / 2.0)
+
+        w_next, _ = asgd_update(w_i, dw, [w_j], ASGDConfig(eps=eps))
+        expect = w_i - eps * ((w_i - w_j) / 2.0 + dw)
+        np.testing.assert_allclose(w_next, expect)
+
+    def test_eq6_reduces_to_eq5_with_one_external(self):
+        w_i, dw = _state(0), _state(1) * 0.1
+        w_j = w_i - 0.5 * dw  # admitted
+        att1, n1 = blend_externals(w_i, dw, [w_j], 0.1)
+        assert n1 == 1.0
+        # eq.(5): attraction = w_i - (w_i+w_j)/2
+        np.testing.assert_allclose(
+            att1, w_i - (w_i + w_j) / 2.0, rtol=1e-6)
+
+    def test_rejected_external_is_noop(self):
+        w_i, dw = _state(0), _state(1)
+        w_j = w_i + 10.0 * dw  # behind: rejected
+        w_next, n_good = asgd_update(w_i, dw, [w_j], ASGDConfig(eps=0.1))
+        assert n_good == 0.0
+        np.testing.assert_allclose(w_next, w_i - 0.1 * dw, rtol=1e-6)
+
+    def test_empty_externals_is_plain_sgd(self):
+        w_i, dw = _state(0), _state(1)
+        w_next, n_good = asgd_update(
+            w_i, dw, [jnp.zeros_like(w_i)], ASGDConfig(eps=0.2))
+        assert n_good == 0.0
+        np.testing.assert_allclose(w_next, w_i - 0.2 * dw, rtol=1e-6)
+
+    def test_silent_equals_plain_sgd(self):
+        w_i, dw = _state(0), _state(1)
+        w_j = w_i - 0.5 * dw
+        silent, _ = asgd_update(w_i, dw, [w_j],
+                                ASGDConfig(eps=0.1, silent=True))
+        np.testing.assert_allclose(silent, w_i - 0.1 * dw, rtol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_blend_mean_is_convex(self, seed, n_ext):
+        """The gated mean in eq. (6) lies in the convex hull of admitted
+        states + w_i: per-coordinate between min and max."""
+        ks = jax.random.split(jax.random.key(seed), n_ext + 2)
+        w_i = jax.random.normal(ks[0], (4,))
+        dw = jax.random.normal(ks[1], (4,)) * 0.1
+        exts = [jax.random.normal(k, (4,)) for k in ks[2:]]
+        attraction, n_good = blend_externals(w_i, dw, exts, 0.1)
+        mean = w_i - attraction
+        stack = jnp.stack([w_i] + exts)
+        assert jnp.all(mean >= stack.min(axis=0) - 1e-5)
+        assert jnp.all(mean <= stack.max(axis=0) + 1e-5)
+
+    def test_pytree_states(self):
+        """The update must be pytree-polymorphic (LM param trees)."""
+        w = {"layer": {"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))}}
+        dw = jax.tree.map(lambda x: 0.1 * jnp.ones_like(x), w)
+        ext = jax.tree.map(lambda x: x * 0.5, w)
+        w_next, _ = asgd_update(w, dw, [ext], ASGDConfig(eps=0.1))
+        assert jax.tree.structure(w_next) == jax.tree.structure(w)
+
+    def test_elastic_matches_paper_when_alpha_eq_eps(self):
+        w_i, dw = _state(0), _state(1) * 0.1
+        w_j = w_i - 0.5 * dw
+        eps = 0.07
+        paper, _ = asgd_update(w_i, dw, [w_j], ASGDConfig(eps=eps))
+        elastic, _ = asgd_update(
+            w_i, dw, [w_j],
+            ASGDConfig(eps=eps, elastic=True, elastic_alpha=eps))
+        np.testing.assert_allclose(paper, elastic, rtol=1e-5)

@@ -1,0 +1,158 @@
+"""Tests for the thread-level GASPI-semantics simulator and the vectorized
+round simulator — including the numpy/jax numeric-core equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ASGDConfig, asgd_update, kmeans
+from repro.core.async_sim import (AsyncSimConfig, _asgd_update_np,
+                                  _kmeans_minibatch_delta_np,
+                                  _parzen_gate_np, run_async_asgd)
+from repro.core.baselines import (RoundSimConfig, run_batch,
+                                  run_minibatch_sgd, shard_data,
+                                  simulate_rounds)
+
+
+class TestNumpyJaxEquivalence:
+    """The threaded simulator uses numpy mirrors of the numeric core; they
+    must agree with the jax versions bit-for-bit (up to f32/f64 casting)."""
+
+    def test_update_equivalence(self, rng):
+        for trial in range(10):
+            w = rng.normal(size=(6, 4))
+            dw = rng.normal(size=(6, 4)) * 0.1
+            exts = [rng.normal(size=(6, 4)) for _ in range(3)]
+            cfg = ASGDConfig(eps=0.07)
+            w_np, good_np = _asgd_update_np(w, dw, exts, cfg)
+            w_jx, good_jx = asgd_update(
+                jnp.asarray(w, jnp.float32), jnp.asarray(dw, jnp.float32),
+                [jnp.asarray(e, jnp.float32) for e in exts], cfg)
+            assert good_np == float(good_jx)
+            np.testing.assert_allclose(w_np, w_jx, rtol=1e-5, atol=1e-6)
+
+    def test_gate_equivalence(self, rng):
+        for trial in range(20):
+            w = rng.normal(size=(8,))
+            dw = rng.normal(size=(8,))
+            wj = rng.normal(size=(8,))
+            g_np = _parzen_gate_np(w, dw, wj, 0.1)
+            g_jx = float(jnp.asarray(
+                __import__("repro.core.parzen", fromlist=["parzen_gate"])
+                .parzen_gate(jnp.asarray(w, jnp.float32),
+                             jnp.asarray(dw, jnp.float32),
+                             jnp.asarray(wj, jnp.float32), 0.1)))
+            assert g_np == g_jx
+
+    def test_kmeans_delta_equivalence(self, rng):
+        x = rng.normal(size=(40, 5))
+        w = rng.normal(size=(6, 5))
+        d_np = _kmeans_minibatch_delta_np(x, w)
+        d_jx = kmeans.minibatch_delta(
+            jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32))
+        np.testing.assert_allclose(d_np, d_jx, rtol=1e-4, atol=1e-6)
+
+
+class TestThreadedSimulator:
+    @pytest.fixture(scope="class")
+    def data(self):
+        x, centers, _ = kmeans.synthetic_clusters(
+            jax.random.key(0), k=6, d=8, m=16000)
+        w0 = kmeans.init_prototypes(jax.random.key(1), x, 6)
+        return (np.asarray(x, np.float64), np.asarray(w0, np.float64),
+                np.asarray(centers, np.float64))
+
+    def test_async_beats_silent_iterations_to_error(self, data):
+        """Paper claim C1/C6: communication drives EARLY convergence — both
+        modes reach similar final error (paper Fig. 9), so compare the
+        early-trajectory error (first half of the run, where the paper's
+        effect lives), averaged over seeds: a single thread-scheduled run
+        is noise-sensitive under host contention."""
+        x, w0, _ = data
+        common = dict(ranks=6, rounds=120)
+
+        def early_auc(silent, seed):
+            out = run_async_asgd(
+                AsyncSimConfig(**common, asgd=ASGDConfig(
+                    eps=0.1, batch=100, silent=silent)),
+                x, w0, seed=seed)
+            tr = np.mean(np.asarray(out["err_trace"]), axis=0)
+            return float(np.mean(tr[: len(tr) // 2]))
+
+        auc = np.mean([early_auc(False, s) for s in (1, 2, 3)])
+        auc_s = np.mean([early_auc(True, s) for s in (1, 2, 3)])
+        assert auc < auc_s, (auc, auc_s)
+
+    def test_messages_are_sent_and_some_admitted(self, data):
+        x, w0, _ = data
+        out = run_async_asgd(
+            AsyncSimConfig(ranks=4, rounds=60,
+                           asgd=ASGDConfig(eps=0.1, batch=100)),
+            x, w0, seed=2)
+        assert out["msgs_sent"].sum() == 4 * 60  # fanout=1, every round
+        assert out["msgs_good"].sum() > 0       # the gate admits some
+
+    def test_partial_updates_still_converge(self, data):
+        """Paper §4.4: induced sparsity (partial messages) stays stable."""
+        x, w0, _ = data
+        out = run_async_asgd(
+            AsyncSimConfig(ranks=4, rounds=100, partial_fraction=0.3,
+                           asgd=ASGDConfig(eps=0.1, batch=100)),
+            x, w0, seed=3)
+        assert out["error_first"] < out["err_trace"][0][0]
+
+    def test_first_vs_mean_aggregation_close(self, data):
+        """Paper C5 (Figs. 16/17): returning w^1 ≈ MapReduce aggregate.
+
+        Compared near convergence (the paper's regime): mid-run the gap is
+        thread-scheduling dependent; at convergence both sit in the same
+        basin (benchmarks measure 0.9% rel. diff at 200 rounds)."""
+        x, w0, _ = data
+        out = run_async_asgd(
+            AsyncSimConfig(ranks=6, rounds=400,
+                           asgd=ASGDConfig(eps=0.1, batch=100)),
+            x, w0, seed=4)
+        assert (abs(out["error_first"] - out["error_mean_aggregate"])
+                / out["error_mean_aggregate"] < 0.15)
+
+
+class TestRoundSimulator:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        x, centers, _ = kmeans.synthetic_clusters(
+            jax.random.key(2), k=8, d=6, m=32000)
+        w0 = kmeans.init_prototypes(jax.random.key(3), x, 8)
+        shards = shard_data(jax.random.key(4), x, 8)
+        return x, w0, shards
+
+    def test_asgd_faster_than_silent(self, setup):
+        x, w0, shards = setup
+        mk = lambda silent: RoundSimConfig(
+            workers=8, rounds=150, delay=1,
+            asgd=ASGDConfig(eps=0.1, batch=64, silent=silent))
+        out = simulate_rounds(jax.random.key(5), shards, w0, mk(False))
+        out_s = simulate_rounds(jax.random.key(5), shards, w0, mk(True))
+        assert float(out["errors"][-1]) < float(out_s["errors"][-1])
+        assert float(out["n_good"].mean()) > 0
+
+    def test_drop_rate_harmless(self, setup):
+        """Paper §4.4: lost messages 'completely harmless' — convergence
+        still beats silent even with 50% drops."""
+        x, w0, shards = setup
+        cfg = RoundSimConfig(workers=8, rounds=150, delay=1, drop_rate=0.5,
+                             asgd=ASGDConfig(eps=0.1, batch=64))
+        out = simulate_rounds(jax.random.key(6), shards, w0, cfg)
+        cfg_s = RoundSimConfig(workers=8, rounds=150, delay=1,
+                               asgd=ASGDConfig(eps=0.1, batch=64, silent=True))
+        out_s = simulate_rounds(jax.random.key(6), shards, w0, cfg_s)
+        # mid-trajectory comparison (final errors tie at convergence)
+        assert (float(jnp.mean(out["errors"]))
+                <= float(jnp.mean(out_s["errors"])))
+
+    def test_batch_and_minibatch_baselines_descend(self, setup):
+        x, w0, _ = setup
+        _, errs_b = run_batch(x, w0, eps=1.0, iters=30)
+        assert errs_b[-1] < errs_b[0]
+        _, errs_m = run_minibatch_sgd(
+            jax.random.key(7), x, w0, eps=0.1, b=64, iters=200)
+        assert errs_m[-1] < errs_m[0]

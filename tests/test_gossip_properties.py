@@ -1,0 +1,137 @@
+"""Property-based tests (hypothesis) on the SPMD gossip invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asgd import ASGDConfig
+from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
+                               exchange_leaves, init_gossip_state,
+                               leaf_groups, sync_dp_apply)
+
+
+def _params(seed, W=4):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return {
+        "a": jax.random.normal(ks[0], (W, 12, 6)),
+        "b": jax.random.normal(ks[1], (W, 8)),
+        "c": jax.random.normal(ks[2], (W, 4, 4)),
+    }
+
+
+class TestLeafGroupProperties:
+    @given(st.integers(1, 6))
+    @settings(max_examples=10, deadline=None)
+    def test_groups_partition_all_leaves(self, p):
+        params = _params(0)
+        groups = leaf_groups(params, p)
+        gids = jax.tree.leaves(groups)
+        assert all(0 <= g < p for g in gids)
+
+    @given(st.integers(2, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_balanced_within_largest_leaf(self, p):
+        """Greedy balancing: max load - min load <= largest leaf size."""
+        params = _params(1)
+        groups = leaf_groups(params, p)
+        loads = [0] * p
+        for leaf, g in zip(jax.tree.leaves(params),
+                           jax.tree.leaves(groups)):
+            loads[g] += leaf.size
+        biggest = max(x.size for x in jax.tree.leaves(params))
+        assert max(loads) - min(loads) <= biggest
+
+
+class TestExchangeProperties:
+    @given(st.integers(0, 3), st.integers(0, 1))
+    @settings(max_examples=16, deadline=None)
+    def test_exchange_conserves_group_content(self, shift_idx, block_idx):
+        """The exchanged block is exactly a roll of the sender's leaves for
+        the selected group, zeros elsewhere (nothing invented or lost)."""
+        params = _params(2)
+        cfg = GossipConfig(shifts=(1, 2, 3, 4), partial_blocks=2)
+        groups = leaf_groups(params, 2)
+        out = exchange_leaves(params, groups, jnp.int32(shift_idx),
+                              jnp.int32(block_idx), cfg)
+        s = cfg.shifts[shift_idx]
+        for k in params:
+            gid = groups[k]
+            if gid == block_idx:
+                np.testing.assert_allclose(
+                    out[k], jnp.roll(params[k], s, axis=0), rtol=1e-6)
+            else:
+                assert float(jnp.abs(out[k]).max()) == 0.0
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_gossip_preserves_shapes_dtypes_finiteness(self, seed):
+        params = _params(seed % 1000)
+        grads = jax.tree.map(lambda x: 0.01 * jnp.tanh(x), params)
+        gcfg = GossipConfig(shifts=(1, 2), partial_blocks=3)
+        acfg = ASGDConfig(eps=0.05)
+        state = init_gossip_state(params, gcfg)
+        out, state, m = asgd_gossip_apply(
+            params, grads, state, jax.random.key(seed), gcfg, acfg)
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+            assert bool(jnp.all(jnp.isfinite(a)))
+        assert 0.0 <= float(m["n_good"]) <= params["a"].shape[0]
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_first_round_is_plain_sgd(self, seed):
+        """Round 0: the staleness buffer is empty (lambda mask) — the update
+        must be exactly local SGD regardless of randomness."""
+        params = _params(seed % 17)
+        grads = jax.tree.map(lambda x: 0.1 * jnp.sign(x), params)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=2, delay=1)
+        acfg = ASGDConfig(eps=0.07)
+        state = init_gossip_state(params, gcfg)
+        out, _, m = asgd_gossip_apply(
+            params, grads, state, jax.random.key(seed), gcfg, acfg)
+        assert float(m["n_good"]) == 0.0
+        for k in params:
+            np.testing.assert_allclose(
+                out[k], params[k] - 0.07 * grads[k], rtol=1e-5, atol=1e-6)
+
+    def test_sync_dp_workers_converge_to_identical(self):
+        """BATCH analogue: after one sync step from identical grads+params,
+        all workers hold identical states (all-reduce semantics)."""
+        params = _params(3)
+        grads = jax.tree.map(lambda x: x * 0.1, _params(4))
+        out = sync_dp_apply(params, grads, 0.1)
+        gm = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        for k in params:
+            np.testing.assert_allclose(
+                out[k], params[k] - 0.1 * gm[k][None], rtol=1e-5)
+
+
+class TestGossipConvergence:
+    def test_workers_contract_with_aligned_descent(self):
+        """Long-run: workers descending the same quadratic with gossip end
+        closer together than without (the ensemble-contraction property
+        that replaces raw asynchrony on TPU — DESIGN.md §2.2b)."""
+        W = 8
+        key = jax.random.key(0)
+        target = jax.random.normal(key, (6, 4))
+        params = {"w": target[None] + 0.5 * jax.random.normal(
+            jax.random.fold_in(key, 1), (W, 6, 4))}
+        gcfg = GossipConfig(shifts=(1, 2, 4), partial_blocks=1)
+        acfg = ASGDConfig(eps=0.1)
+        state = init_gossip_state(params, gcfg)
+        p_asgd = params
+        p_silent = params
+        for i in range(60):
+            k = jax.random.key(i)
+            grads_a = {"w": p_asgd["w"] - target[None]}
+            p_asgd, state, _ = asgd_gossip_apply(
+                p_asgd, grads_a, state, k, gcfg, acfg)
+            grads_s = {"w": p_silent["w"] - target[None]}
+            p_silent = jax.tree.map(
+                lambda w, g: w - 0.1 * g, p_silent, grads_s)
+
+        def spread(p):
+            return float(jnp.mean(jnp.var(p["w"], axis=0)))
+
+        assert spread(p_asgd) < spread(p_silent)

@@ -1,0 +1,167 @@
+"""Pallas kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True).
+
+Per the brief: for each kernel, sweep shapes/dtypes and assert_allclose
+against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import (kmeans_assign_ref,
+                                             minibatch_delta_from_stats)
+from repro.kernels.parzen_blend.ops import parzen_blend
+from repro.kernels.parzen_blend.ref import parzen_blend_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+class TestKmeansAssign:
+    @pytest.mark.parametrize("m,d,k", [
+        (256, 8, 4), (512, 10, 10), (1000, 17, 7), (256, 128, 100),
+        (300, 5, 3), (2048, 64, 256), (64, 3, 2),
+    ])
+    def test_shape_sweep(self, m, d, k):
+        x = jax.random.normal(jax.random.key(0), (m, d))
+        w = jax.random.normal(jax.random.key(1), (k, d))
+        i1, s1, c1 = kmeans_assign(x, w)
+        i2, s2, c2 = kmeans_assign_ref(x, w)
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(c1, c2)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        x = jax.random.normal(jax.random.key(0), (512, 16)).astype(dtype)
+        w = jax.random.normal(jax.random.key(1), (8, 16)).astype(dtype)
+        i1, s1, c1 = kmeans_assign(x, w)
+        i2, s2, c2 = kmeans_assign_ref(x.astype(jnp.float32),
+                                       w.astype(jnp.float32))
+        # bf16 rounding can flip ties; tolerate <1% disagreement
+        frac = np.mean(np.asarray(i1) != np.asarray(i2))
+        assert frac < 0.01, frac
+
+    def test_matches_paper_eq9(self):
+        """Kernel stats -> eq. (9) must equal core.kmeans.minibatch_delta."""
+        from repro.core.kmeans import minibatch_delta
+        x = jax.random.normal(jax.random.key(2), (640, 12))
+        w = jax.random.normal(jax.random.key(3), (6, 12))
+        _, sums, counts = kmeans_assign(x, w)
+        dw_kernel = minibatch_delta_from_stats(w, sums, counts, x.shape[0])
+        np.testing.assert_allclose(
+            dw_kernel, minibatch_delta(x, w), rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 40),
+           st.integers(2, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_property_counts_sum_to_m(self, seed, k, d):
+        m = 384
+        x = jax.random.normal(jax.random.key(seed), (m, d))
+        w = jax.random.normal(jax.random.key(seed + 1), (k, d))
+        _, sums, counts = kmeans_assign(x, w)
+        assert float(counts.sum()) == m
+        np.testing.assert_allclose(
+            sums.sum(0), x.sum(0), rtol=1e-3, atol=1e-3)
+
+
+class TestParzenBlend:
+    @pytest.mark.parametrize("n", [100, 512, 32768, 70000, 512 * 64])
+    @pytest.mark.parametrize("ahead", [True, False])
+    def test_shape_sweep(self, n, ahead):
+        ks = jax.random.split(jax.random.key(n + ahead), 3)
+        w = jax.random.normal(ks[0], (n,))
+        dw = jax.random.normal(ks[1], (n,)) * 0.1
+        ext = w - (0.5 if ahead else -0.5) * dw
+        out, g = parzen_blend(w, ext, dw, 0.1)
+        out_r, g_r = parzen_blend_ref(w, ext, dw, 0.1)
+        assert float(g) == float(g_r) == (1.0 if ahead else 0.0)
+        np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtype_sweep(self, dtype):
+        n = 4096
+        ks = jax.random.split(jax.random.key(0), 3)
+        w = jax.random.normal(ks[0], (n,)).astype(dtype)
+        dw = (jax.random.normal(ks[1], (n,)) * 0.1).astype(dtype)
+        ext = (w.astype(jnp.float32) - 0.5 * dw.astype(jnp.float32)) \
+            .astype(dtype)
+        out, g = parzen_blend(w, ext, dw, 0.1)
+        out_r, g_r = parzen_blend_ref(w.astype(jnp.float32),
+                                      ext.astype(jnp.float32),
+                                      dw.astype(jnp.float32), 0.1)
+        assert out.dtype == dtype
+        assert float(g) == float(g_r)
+        np.testing.assert_allclose(out.astype(jnp.float32), out_r,
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_empty_external_gate_closed(self):
+        n = 2048
+        w = jax.random.normal(jax.random.key(0), (n,))
+        dw = jax.random.normal(jax.random.key(1), (n,))
+        out, g = parzen_blend(w, jnp.zeros(n), dw, 0.2)
+        assert float(g) == 0.0
+        np.testing.assert_allclose(out, w - 0.2 * dw, rtol=1e-5)
+
+    def test_agrees_with_core_asgd_update(self):
+        """Kernel == repro.core.asgd.asgd_update (flat state, 1 external)."""
+        from repro.core import ASGDConfig, asgd_update
+        n = 8192
+        ks = jax.random.split(jax.random.key(7), 3)
+        w = jax.random.normal(ks[0], (n,))
+        dw = jax.random.normal(ks[1], (n,)) * 0.05
+        ext = jax.random.normal(ks[2], (n,))
+        out_k, g = parzen_blend(w, ext, dw, 0.05)
+        out_c, n_good = asgd_update(w, dw, [ext], ASGDConfig(eps=0.05))
+        assert float(g) == float(n_good)
+        np.testing.assert_allclose(out_k, out_c, rtol=1e-5, atol=1e-6)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("shape", [
+        # (B, S, H, P, N, chunk)
+        (2, 128, 4, 8, 16, 32), (1, 100, 2, 16, 8, 32),
+        (2, 256, 3, 8, 128, 128), (1, 64, 8, 64, 128, 64),
+        (3, 96, 1, 4, 4, 32),
+    ])
+    def test_shape_sweep(self, shape):
+        Bb, S, H, P, N, chunk = shape
+        ks = jax.random.split(jax.random.key(sum(shape)), 5)
+        x = jax.random.normal(ks[0], (Bb, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        B = jax.random.normal(ks[3], (Bb, S, 1, N))
+        C = jax.random.normal(ks[4], (Bb, S, 1, N))
+        y1, h1 = ssd_scan(x, dt, A, B, C, chunk=chunk)
+        y2, h2 = ssd_scan_ref(x, dt, A, B, C)
+        np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(h1, h2, rtol=2e-3, atol=2e-3)
+
+    def test_matches_model_chunked_form(self):
+        """Kernel == the model's jnp chunked implementation (independent
+        derivations of the same algorithm)."""
+        from repro.models.ssm import ssd_chunked
+        Bb, S, H, P, N = 2, 128, 4, 8, 16
+        ks = jax.random.split(jax.random.key(0), 5)
+        x = jax.random.normal(ks[0], (Bb, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        B = jax.random.normal(ks[3], (Bb, S, 1, N))
+        C = jax.random.normal(ks[4], (Bb, S, 1, N))
+        y1, h1 = ssd_scan(x, dt, A, B, C, chunk=32)
+        y2, h2 = ssd_chunked(x, dt, A, B, C, chunk=32)
+        np.testing.assert_allclose(y1, y2, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(h1, h2, rtol=2e-3, atol=2e-3)
+
+    def test_decay_extremes_stable(self):
+        """Large negative A (fast forgetting) and tiny dt must not NaN."""
+        Bb, S, H, P, N = 1, 64, 2, 4, 8
+        x = jnp.ones((Bb, S, H, P))
+        dt = jnp.full((Bb, S, H), 1e-4)
+        A = jnp.array([-100.0, -1e-3])
+        B = jnp.ones((Bb, S, 1, N))
+        C = jnp.ones((Bb, S, 1, N))
+        y, h = ssd_scan(x, dt, A, B, C, chunk=32)
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert bool(jnp.all(jnp.isfinite(h)))

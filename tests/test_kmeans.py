@@ -1,0 +1,95 @@
+"""Tests for the K-Means application layer (paper eqs. 8-10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeans
+
+
+class TestAssign:
+    def test_matches_naive_distance(self, key):
+        x = jax.random.normal(key, (64, 5))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (7, 5))
+        naive = jnp.argmin(
+            jnp.sum((x[:, None, :] - w[None, :, :]) ** 2, axis=-1), axis=-1)
+        np.testing.assert_array_equal(kmeans.assign(x, w), naive)
+
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 6))
+    @settings(max_examples=25, deadline=None)
+    def test_assign_property(self, seed, k, d):
+        ks = jax.random.split(jax.random.key(seed), 2)
+        x = jax.random.normal(ks[0], (32, d))
+        w = jax.random.normal(ks[1], (k, d))
+        s = kmeans.assign(x, w)
+        d2 = jnp.sum((x[:, None, :] - w[None, :, :]) ** 2, axis=-1)
+        # assigned prototype is (one of) the closest
+        chosen = jnp.take_along_axis(d2, s[:, None], axis=1)[:, 0]
+        assert jnp.all(chosen <= jnp.min(d2, axis=1) + 1e-5)
+
+
+class TestDeltas:
+    def test_minibatch_delta_is_analytic_mean_shift(self, key):
+        """eq. (9): dw_k = 1/m sum_{i in k} (w_k - x_i)."""
+        x = jax.random.normal(key, (50, 4))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (6, 4))
+        s = np.asarray(kmeans.assign(x, w))
+        expect = np.zeros((6, 4))
+        for i in range(50):
+            expect[s[i]] += np.asarray(w)[s[i]] - np.asarray(x)[i]
+        expect /= 50
+        np.testing.assert_allclose(
+            kmeans.minibatch_delta(x, w), expect, rtol=1e-5, atol=1e-6)
+
+    def test_online_delta_single_row(self, key):
+        x = jax.random.normal(key, (4,))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (3, 4))
+        dw = kmeans.online_delta(x, w)
+        s = int(kmeans.assign(x[None], w)[0])
+        # only row s is touched — eq. (10)
+        np.testing.assert_allclose(dw[s], w[s] - x, rtol=1e-6)
+        mask = np.ones(3, bool)
+        mask[s] = False
+        assert jnp.all(dw[mask] == 0.0)
+
+    def test_gradient_step_descends_quantization_error(self, key):
+        """A small batch step must not increase E(w) (descent direction)."""
+        x, _, _ = kmeans.synthetic_clusters(key, k=5, d=3, m=2000)
+        w = kmeans.init_prototypes(jax.random.fold_in(key, 1), x, 5)
+        e0 = kmeans.quantization_error(x, w)
+        w1 = w - 0.5 * kmeans.batch_delta(x, w)
+        e1 = kmeans.quantization_error(x, w1)
+        assert e1 < e0
+
+    def test_delta_is_autodiff_gradient(self, key):
+        """eq. (9) equals d/dw of eq. (8) (away from assignment boundaries;
+        the argmin is piecewise constant so autodiff ignores it, matching
+        the paper's derivation)."""
+        x = jax.random.normal(key, (40, 3))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (4, 3))
+
+        def loss(w):
+            s = kmeans.assign(x, jax.lax.stop_gradient(w))
+            return 0.5 * jnp.mean(jnp.sum((x - w[s]) ** 2, axis=-1))
+
+        g = jax.grad(loss)(w)
+        np.testing.assert_allclose(
+            kmeans.minibatch_delta(x, w), g, rtol=1e-4, atol=1e-6)
+
+
+class TestSynthetic:
+    def test_shapes_and_labels(self, key):
+        x, c, l = kmeans.synthetic_clusters(key, k=8, d=6, m=1000)
+        assert x.shape == (1000, 6) and c.shape == (8, 6) and l.shape == (1000,)
+        assert int(l.max()) < 8
+        assert jnp.all(jnp.isfinite(x))
+
+    def test_full_pipeline_converges_near_truth(self, key):
+        """BATCH descent on well-separated clusters approaches the truth."""
+        x, c, _ = kmeans.synthetic_clusters(key, k=4, d=2, m=4000, spread=0.05)
+        w = kmeans.init_prototypes(jax.random.fold_in(key, 3), x, 4)
+        from repro.core.baselines import run_batch
+        w, errs = run_batch(x, w, eps=1.0, iters=60)
+        assert errs[-1] < errs[0]
+        assert kmeans.ground_truth_error(w, c) < 0.1
