@@ -40,6 +40,7 @@ LAT = 1.5e-6        # per-message latency, s
 CPU_SCALE = 0.6     # paper-era CPU vs this host (relative curves invariant)
 
 _rows: list[tuple] = []
+_records: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -50,6 +51,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def rows():
     return list(_rows)
+
+
+def record(name: str, **fields) -> None:
+    """Collect one machine-readable benchmark record (run.py --out writes
+    them as JSON — the perf trajectory seed, e.g. BENCH_gossip_blend.json)."""
+    _records.append({"name": name, **fields})
+
+
+def records():
+    return list(_records)
 
 
 def time_jax(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:

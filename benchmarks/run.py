@@ -10,15 +10,38 @@ Prints ``name,us_per_call,derived`` CSV rows.
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig8 spmd  # substring filter
+  PYTHONPATH=src python -m benchmarks.run kernel_vs_ref \
+      --out BENCH_gossip_blend.json                  # + JSON records
+
+--out PATH writes every machine-readable record collected by the selected
+benchmarks (benchmarks.common.record) plus the CSV rows as JSON — the perf
+trajectory seed consumed by later PRs.
 """
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import traceback
 
 
+def _parse_args(argv):
+    filters, out = [], None
+    it = iter(argv)
+    for a in it:
+        if a == "--out":
+            out = next(it, None)
+            if out is None:
+                raise SystemExit("--out requires a path")
+        elif a.startswith("--out="):
+            out = a.split("=", 1)[1]
+        elif not a.startswith("-"):
+            filters.append(a)
+    return filters, out
+
+
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    filters, out_path = _parse_args(sys.argv[1:])
 
     from . import paper_figs, roofline_report, spmd_step, stragglers
     groups = []
@@ -37,6 +60,23 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report at end
             traceback.print_exc()
             failures.append((name, repr(e)))
+    if out_path:
+        from . import common
+        import jax
+        payload = {
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "records": common.records(),
+            "rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in common.rows()],
+        }
+        with open(out_path, "w") as f:
+            # allow_nan=False: fail fast rather than emit non-spec NaN
+            # tokens into the machine-readable trajectory file
+            json.dump(payload, f, indent=2, allow_nan=False)
+        print(f"wrote {out_path} ({len(common.records())} records)",
+              file=sys.stderr)
+
     if failures:
         for name, err in failures:
             print(f"FAILED,{name},{err}")

@@ -13,12 +13,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.asgd import ASGDConfig
+from repro.core.asgd import ASGDConfig, asgd_update, asgd_update_fused
 from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
                                init_gossip_state, local_sgd_apply,
                                sync_dp_apply)
+from repro.kernels.gossip_blend.ref import gossip_blend_batched
 
-from .common import emit, time_jax
+from .common import emit, record, time_jax
 
 
 def _params(W=4, n_mb=8):
@@ -78,4 +79,91 @@ def gossip_overhead_pct():
          f"overhead_pct={100 * (ua - ul) / ul:.1f}")
 
 
-ALL = [spmd_step_cost, gossip_overhead_pct]
+def _blend_sweep_counts(p: int) -> tuple[int, int, int, int]:
+    """HBM-sweep accounting for one gossip round with P externals, in units
+    of one full-state traversal (the update is purely memory-bound, so
+    state-sized traversals ARE the cost model).
+
+    naive (core.asgd.blend_externals, Python loop over externals):
+      per external: empty_state_mask reads ext (1), parzen_gate
+      re-materializes stepped = w - eps*dw (reads w+dw, writes 1 -> 3),
+      then two tree_sq_dist traversals (2 reads each -> 4), and the
+      accumulation acc += g*ext (read acc+ext, write acc -> 3); 11 per
+      external counting reads+writes, 4 distinct passes. Final
+      scale/sub/axpy ~5 more.
+
+    fused (gossip_blend kernel): pass 1 reads w+dw+P externals (P+2);
+      pass 2 reads the same and writes w_next (P+3). Two passes total,
+      independent of P.
+    """
+    naive_passes = 4 * p + 2
+    fused_passes = 2
+    naive_bytes = 11 * p + 5
+    fused_bytes = (p + 2) + (p + 3)
+    return naive_passes, fused_passes, naive_bytes, fused_bytes
+
+
+def kernel_vs_ref():
+    """Fused multi-external gossip blend vs the reference per-external loop.
+
+    Reports, per P in {1, 2, 5}:
+      * HBM-sweep accounting (see _blend_sweep_counts) — the primary
+        measure for a purely memory-bound update: the fused kernel makes 2
+        passes over the stacked externals independent of P vs 4P+2
+        traversal passes for the loop; in state-size byte units the ratio
+        is (11P+5)/(2P+5), i.e. 4.0x at P=5;
+      * wall clock of the reference pytree loop (asgd_update) vs the fused
+        batched dataflow (gossip_blend_batched — the jnp matvec form of
+        what the kernel computes, the honest CPU stand-in: XLA:CPU cannot
+        fuse the 3 stack reductions into one pass the way the kernel does,
+        so wall clock UNDERstates the TPU benefit) vs the Pallas kernel
+        itself (interpret auto-mode, timed at P=5 only — it measures the
+        interpreter, recorded to track its overhead, not as a speedup).
+    """
+    n = 1 << 22  # 16 MiB f32 state: memory-bound regime
+    acfg = ASGDConfig(eps=0.05)
+    ks = jax.random.split(jax.random.key(0), 2)
+    w = jax.random.normal(ks[0], (n,))
+    dw = jax.random.normal(ks[1], (n,)) * 0.1
+
+    for p in (1, 2, 5):
+        # externals at varying blend positions; ~half admitted
+        exts = jnp.stack([w - (0.5 if i % 2 == 0 else -0.5) * dw * (1 + i)
+                          for i in range(p)])
+        ext_list = [exts[i] for i in range(p)]
+
+        f_ref = jax.jit(lambda w, dw, *es: asgd_update(
+            w, dw, list(es), acfg)[0])
+        us_ref = time_jax(f_ref, w, dw, *ext_list)
+
+        f_fused = jax.jit(lambda w, es, dw: gossip_blend_batched(
+            w, es, dw, acfg.eps)[0])
+        us_fused = time_jax(f_fused, w, exts, dw)
+
+        us_kernel = None  # None (not NaN): keeps the JSON record strict
+        if p == 5:
+            f_kernel = jax.jit(lambda w, dw, *es: asgd_update_fused(
+                w, dw, list(es), acfg)[0])
+            us_kernel = time_jax(f_kernel, w, dw, *ext_list,
+                                 iters=2, warmup=1)
+
+        np_, fp_, nb, fb = _blend_sweep_counts(p)
+        sweep_speedup = nb / fb
+        wall_speedup = us_ref / us_fused
+        kern_txt = f"{us_kernel:.1f}" if us_kernel is not None else "-"
+        emit(f"spmd/gossip_blend/kernel_vs_ref/P={p}", us_fused,
+             f"ref_us={us_ref:.1f};sweep_speedup={sweep_speedup:.2f};"
+             f"wall_speedup={wall_speedup:.2f};"
+             f"naive_passes={np_};fused_passes={fp_};"
+             f"naive_bytes={nb};fused_bytes={fb};"
+             f"pallas_interpret_us={kern_txt}")
+        record("gossip_blend", p=p, n=n, state_mb=n * 4 / 2**20,
+               ref_ms=us_ref / 1e3, fused_ms=us_fused / 1e3,
+               pallas_interpret_ms=(us_kernel / 1e3
+                                    if us_kernel is not None else None),
+               speedup=sweep_speedup, wall_speedup=wall_speedup,
+               naive_passes=np_, fused_passes=fp_,
+               naive_sweep_bytes=nb, fused_sweep_bytes=fb)
+
+
+ALL = [spmd_step_cost, gossip_overhead_pct, kernel_vs_ref]

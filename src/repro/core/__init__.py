@@ -2,19 +2,23 @@
 
 Public surface:
   ASGDConfig, asgd_update, asgd_delta_bar   — paper eqs. (2)-(7)
+  asgd_update_fused                         — batched Pallas fused update
+  packing                                   — pack-once (R, LANE) state layout
   parzen_gate                               — paper eq. (4)
   kmeans                                    — paper eqs. (8)-(10) application
   baselines                                 — BATCH / SimuParallelSGD / MiniBatch
   async_sim                                 — threaded GASPI-semantics simulator
   gossip                                    — SPMD (shard_map) production path
 """
-from .asgd import ASGDConfig, asgd_delta_bar, asgd_update, blend_externals
+from .asgd import (ASGDConfig, asgd_delta_bar, asgd_update,
+                   asgd_update_fused, blend_externals)
 from .parzen import empty_state_mask, parzen_gate, parzen_gate_inner
 
 __all__ = [
     "ASGDConfig",
     "asgd_delta_bar",
     "asgd_update",
+    "asgd_update_fused",
     "blend_externals",
     "empty_state_mask",
     "parzen_gate",

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from .parzen import empty_state_mask, parzen_gate
 from .tree import tree_axpy, tree_scale, tree_sub, tree_zeros_like
 
+# the fused path (repro.kernels.gossip_blend + the pack-once layout) is
+# imported lazily inside asgd_update_fused so that the pure-jnp core stays
+# importable even if the Pallas toolchain is unavailable
+
 
 @dataclasses.dataclass(frozen=True)
 class ASGDConfig:
@@ -39,6 +43,10 @@ class ASGDConfig:
         the state instead of scaling it by eps inside the gradient step
         (EASGD-style). Paper-faithful mode is elastic=False.
       elastic_alpha: blend strength for the elastic variant.
+      use_fused: route asgd_update through the batched fused Pallas kernel
+        (repro.kernels.gossip_blend): all P Parzen gates + the gated mean
+        in two HBM passes over the pack-once (R, LANE) state layout,
+        instead of the ~4-sweeps-per-external pytree loop.
     """
 
     eps: float = 0.05
@@ -47,6 +55,7 @@ class ASGDConfig:
     silent: bool = False
     elastic: bool = False
     elastic_alpha: float = 0.5
+    use_fused: bool = False
 
 
 def blend_externals(w_i, dw_i, externals: Sequence[Any], eps,
@@ -103,9 +112,15 @@ def asgd_update(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig):
 
     Returns (w_next, n_good) where n_good counts admitted externals — the
     paper's 'good messages' metric (Fig. 12).
+
+    With cfg.use_fused the update is dispatched to asgd_update_fused (the
+    batched two-pass Pallas kernel); results agree to f32 rounding
+    (tests/test_gossip_blend.py).
     """
     if cfg.silent or not externals:
         return tree_axpy(-cfg.eps, dw_i, w_i), jnp.float32(0.0)
+    if cfg.use_fused:
+        return asgd_update_fused(w_i, dw_i, externals, cfg)
 
     attraction, n_good = blend_externals(
         w_i, dw_i, externals, cfg.eps, use_parzen=cfg.use_parzen)
@@ -116,3 +131,33 @@ def asgd_update(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig):
         delta_bar = tree_axpy(1.0, attraction, dw_i)
         w_next = tree_axpy(-cfg.eps, delta_bar, w_i)
     return w_next, n_good
+
+
+def asgd_update_fused(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig,
+                      *, block_rows: int = 64, interpret=None):
+    """Fused-kernel ASGD update: identical semantics to asgd_update.
+
+    Pack-once dataflow (repro.core.packing): the pytree state, its gradient
+    step, and the P externals are each ravelled to the padded (R, LANE)
+    layout exactly once, the two-pass gossip_blend kernel evaluates all P
+    gates and the gated mean on the packed views, and only the final state
+    is unravelled back to the tree.  HBM cost per round: 2 passes over the
+    stacked externals vs ~4P full-state sweeps for the pytree loop.
+
+    Returns (w_next, n_good) like asgd_update.
+    """
+    from ..kernels.gossip_blend import gossip_blend_packed
+    from .packing import pack, pack_spec, unpack
+
+    if cfg.silent or not externals:
+        return tree_axpy(-cfg.eps, dw_i, w_i), jnp.float32(0.0)
+
+    spec = pack_spec(w_i, block_rows=block_rows)
+    w2 = pack(w_i, spec)
+    d2 = pack(dw_i, spec)
+    ext3 = jnp.stack([pack(e, spec) for e in externals])
+    out2, gates = gossip_blend_packed(
+        w2, d2, ext3, cfg.eps, use_parzen=cfg.use_parzen,
+        elastic=cfg.elastic, elastic_alpha=cfg.elastic_alpha,
+        block_rows=block_rows, interpret=interpret)
+    return unpack(out2, spec), jnp.sum(gates)

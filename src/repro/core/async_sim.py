@@ -42,6 +42,8 @@ def _parzen_gate_np(w_i, dw_i, w_j, eps):
 
 
 def _asgd_update_np(w_i, dw_i, externals, cfg: ASGDConfig):
+    if cfg.use_fused and externals:
+        return _asgd_update_np_fused(w_i, dw_i, externals, cfg)
     gates = []
     for w_j in externals:
         g = float(np.sum(w_j * w_j) > 0.0)
@@ -57,6 +59,39 @@ def _asgd_update_np(w_i, dw_i, externals, cfg: ASGDConfig):
     if cfg.elastic:
         return (w_i - cfg.eps * dw_i) - cfg.elastic_alpha * attraction, sum(gates)
     return w_i - cfg.eps * (attraction + dw_i), sum(gates)
+
+
+def _asgd_update_np_fused(w_i, dw_i, externals, cfg: ASGDConfig):
+    """Batched mirror of the fused gossip_blend kernel dataflow.
+
+    One vectorized pass over the stacked (P, ...) externals computes all 3P
+    reduction terms (expanded eq.-4 identity), a second applies the gated
+    mean — the NumPy analogue of the kernel's 2-HBM-pass structure, vs the
+    per-external Python loop above.  Verified equivalent to _asgd_update_np
+    in tests/test_gossip_blend.py.
+    """
+    E = np.stack([np.asarray(w_j).reshape(-1) for w_j in externals])  # (P,n)
+    w = w_i.reshape(-1)
+    dw = dw_i.reshape(-1)
+    # pass 1: all reduction terms at once
+    dot = E @ (-dw) + np.dot(dw, w)          # <dw, w - ext_p>  (P,)
+    sq_ext = np.einsum("pn,pn->p", E, E)
+    nonempty = sq_ext > 0.0
+    if cfg.use_parzen:
+        sq_dw = np.dot(dw, dw)
+        gates = ((2.0 * cfg.eps * dot - cfg.eps ** 2 * sq_dw) > 0.0) & nonempty
+    else:
+        gates = nonempty
+    g = gates.astype(w.dtype)
+    # pass 2: gated mean + step
+    denom = 1.0 + g.sum()
+    mean = (w + g @ E) / denom
+    attraction = (w - mean).reshape(w_i.shape)
+    if cfg.elastic:
+        w_next = (w_i - cfg.eps * dw_i) - cfg.elastic_alpha * attraction
+    else:
+        w_next = w_i - cfg.eps * (attraction + dw_i)
+    return w_next, float(g.sum())
 
 
 def _kmeans_minibatch_delta_np(batch, w):

@@ -14,7 +14,10 @@ mini-batch):
        collective — the moral equivalent of the paper's single-sided
        'send to one random peer', see DESIGN.md table)
   3. blend the *previous* round's received block (staleness delay >= 1, the
-     asynchrony analogue) through the Parzen gate, eq. (4)-(6)
+     asynchrony analogue) through the Parzen gate, eq. (4)-(6) — with
+     ASGDConfig.use_fused the gate terms come from the single-traversal
+     fused reduction (_per_worker_reduce3, the SPMD analogue of pass 1 of
+     the kernels/gossip_blend Pallas kernel) instead of four tree sweeps
   4. store the newly received block in the staleness buffer
 
 Partial-update partitioning (paper §4.4 leaves "the choice of the
@@ -42,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from .asgd import ASGDConfig
+from .parzen import gate_from_terms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -179,6 +183,67 @@ def _per_worker_sq_dist(a, b, mask_tree=None, block_idx=None):
     return sum(jax.tree.leaves(dists))
 
 
+def _per_worker_reduce3(params, grads, ext, mask_tree=None, block_idx=None):
+    """Fused gate reduction: all three eq.-(4) terms in ONE state traversal.
+
+    Returns (dot, sq_dw, sq_ext), each (W,):
+      dot    = <dw, w - ext>        sq_dw = ||dw||^2      sq_ext = ||ext||^2
+    summed over non-worker axes.  Replaces the naive four traversals
+    (stepped materialization + d_after + d_before + nonempty) with one,
+    via the expanded identity d_before - d_after
+      = 2*eps*<dw, w-ext> - eps^2*||dw||^2 — the SPMD analogue of pass 1 of
+    the gossip_blend Pallas kernel.  In 'leaves' mode only leaves whose
+    static group id equals the traced block_idx contribute (to every term,
+    so the identity stays exact under the restriction).
+    """
+    wl = jax.tree.leaves(params)
+    gl = jax.tree.leaves(grads)
+    el = jax.tree.leaves(ext)
+    ml = jax.tree.leaves(mask_tree) if mask_tree is not None \
+        else [None] * len(wl)
+    dot = sq_dw = sq_ext = 0.0
+    for x, d, e, gi in zip(wl, gl, el, ml):
+        axes = tuple(range(1, x.ndim))
+        x32, d32, e32 = (t.astype(jnp.float32) for t in (x, d, e))
+        t_dot = jnp.sum(d32 * (x32 - e32), axis=axes)
+        t_dw = jnp.sum(d32 * d32, axis=axes)
+        t_ext = jnp.sum(e32 * e32, axis=axes)
+        if gi is not None:
+            sel = (gi == block_idx)
+            t_dot = jnp.where(sel, t_dot, 0.0)
+            t_dw = jnp.where(sel, t_dw, 0.0)
+            t_ext = jnp.where(sel, t_ext, 0.0)
+        dot = dot + t_dot
+        sq_dw = sq_dw + t_dw
+        sq_ext = sq_ext + t_ext
+    return dot, sq_dw, sq_ext
+
+
+def _gossip_gate(params, grads, ext, acfg: ASGDConfig, mask_tree=None,
+                 block_idx=None):
+    """Per-worker admission gate (eq. 3 x eq. 4) -> (W,) f32.
+
+    acfg.use_fused selects the single-traversal reduction; otherwise the
+    original four-traversal form is kept (ablation / bitwise reference).
+    """
+    if acfg.use_fused:
+        dot, sq_dw, sq_ext = _per_worker_reduce3(
+            params, grads, ext, mask_tree, block_idx)
+        return gate_from_terms(dot, sq_dw, sq_ext, acfg.eps,
+                               use_parzen=acfg.use_parzen)
+
+    stepped = jax.tree.map(
+        lambda w, g: w.astype(jnp.float32) - acfg.eps * g.astype(jnp.float32),
+        params, grads)
+    d_after = _per_worker_sq_dist(stepped, ext, mask_tree, block_idx)
+    d_before = _per_worker_sq_dist(params, ext, mask_tree, block_idx)
+    zeros = jax.tree.map(jnp.zeros_like, ext)
+    nonempty = (_per_worker_sq_dist(ext, zeros, mask_tree, block_idx) > 0.0)
+    if acfg.use_parzen:
+        return jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    return nonempty.astype(jnp.float32)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class GossipState:
@@ -299,17 +364,7 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
         ext, ext_idx = state.buf, state.buf_idx
 
     # Parzen gate (eq. 4) restricted to the buffered partition's leaves
-    stepped = jax.tree.map(
-        lambda w, g: w.astype(jnp.float32) - acfg.eps * g.astype(jnp.float32),
-        params, grads)
-    d_after = _per_worker_sq_dist(stepped, ext, groups, ext_idx)
-    d_before = _per_worker_sq_dist(params, ext, groups, ext_idx)
-    zeros = jax.tree.map(jnp.zeros_like, ext)
-    nonempty = (_per_worker_sq_dist(ext, zeros, groups, ext_idx) > 0.0)
-    if acfg.use_parzen:
-        gate = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
-    else:
-        gate = nonempty.astype(jnp.float32)
+    gate = _gossip_gate(params, grads, ext, acfg, groups, ext_idx)
 
     def upd(w, g, e, gi):
         in_group = (gi == ext_idx)  # traced bool scalar, static group id
@@ -339,17 +394,7 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
 
     local_blk = slice_rows(params, ext_idx, p)
     grads_blk = slice_rows(grads, ext_idx, p)
-    stepped = jax.tree.map(
-        lambda w, g: w.astype(jnp.float32) - acfg.eps * g.astype(jnp.float32),
-        local_blk, grads_blk)
-    d_after = _per_worker_sq_dist(stepped, ext)
-    d_before = _per_worker_sq_dist(local_blk, ext)
-    zeros = jax.tree.map(jnp.zeros_like, ext)
-    nonempty = (_per_worker_sq_dist(ext, zeros) > 0.0)
-    if acfg.use_parzen:
-        gate = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
-    else:
-        gate = nonempty.astype(jnp.float32)
+    gate = _gossip_gate(local_blk, grads_blk, ext, acfg)
 
     blended = jax.tree.map(
         lambda w, e, g: _blend(w, e, g, gate, acfg),

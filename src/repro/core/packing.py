@@ -1,0 +1,84 @@
+"""Pack-once state layout for the fused gossip kernels.
+
+The fused Pallas kernels (repro/kernels/gossip_blend, parzen_blend) operate
+on the state viewed as a padded ``(R, LANE)`` f32 matrix.  Re-ravelling the
+param pytree into that layout inside every kernel call costs one extra full
+HBM sweep per operand per call — for the multi-external blend that is P+2
+wasted sweeps per gossip round, as much as the fusion itself saves.
+
+This module makes the layout a first-class carried representation instead:
+
+  * :func:`pack_spec` computes the static layout metadata once per state
+    *structure* (treedef, leaf shapes/dtypes, padded row count);
+  * :func:`pack` ravels a pytree into the ``(R, LANE)`` layout once per
+    step; the packed array is then carried through the reduce and apply
+    kernel passes untouched;
+  * :func:`unpack` restores the pytree (original shapes and dtypes) only at
+    the boundary, after the fused update has produced the new packed state.
+
+Zero padding is exact for every fused op: pads contribute 0 to all
+reduction terms and the blend maps 0 -> 0 in padded positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import LANE
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Static layout of a pytree state in the packed ``(rows, LANE)`` view.
+
+    Hashable (all fields are hashable), so it can ride through jit as a
+    static argument.
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    n: int            # total real elements
+    rows: int         # padded row count, a multiple of block_rows
+    block_rows: int
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANE
+
+
+def pack_spec(tree, block_rows: int = 64) -> PackSpec:
+    """Compute the packed layout for ``tree`` (one-time, static)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    sizes = tuple(int(l.size) for l in leaves)
+    n = sum(sizes)
+    rows = -(-max(n, 1) // LANE)
+    rows = -(-rows // block_rows) * block_rows
+    return PackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    sizes=sizes, n=n, rows=rows, block_rows=block_rows)
+
+
+def pack(tree, spec: PackSpec):
+    """Ravel ``tree`` into the padded ``(rows, LANE)`` f32 layout (1 sweep)."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(-1) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+    flat = jnp.pad(flat, (0, spec.padded - spec.n))
+    return flat.reshape(spec.rows, LANE)
+
+
+def unpack(arr2d, spec: PackSpec):
+    """Inverse of :func:`pack`: restore shapes and dtypes (1 sweep)."""
+    flat = arr2d.reshape(-1)[:spec.n]
+    out, off = [], 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        out.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, out)

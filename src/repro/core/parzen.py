@@ -17,9 +17,10 @@ pass as the blend itself.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from .tree import tree_axpy, tree_sq_dist
+from .tree import tree_axpy, tree_sq_dist, tree_sq_norm
 
 
 def parzen_gate(w_i, dw_i, w_j, eps):
@@ -50,8 +51,6 @@ def parzen_gate_inner(w_i, dw_i, w_j, eps):
     One fewer full-state traversal than the direct form; used by the fused
     kernel and verified equivalent in tests/test_parzen.py.
     """
-    import jax
-
     dots = jax.tree.map(
         lambda dw, wi, wj: jnp.sum(
             dw.astype(jnp.float32)
@@ -63,11 +62,27 @@ def parzen_gate_inner(w_i, dw_i, w_j, eps):
     return (lhs > rhs).astype(jnp.float32)
 
 
+def gate_from_terms(dot, sq_dw, sq_ext, eps, use_parzen: bool = True):
+    """Admission gate (eq. 3 x eq. 4) from pre-reduced inner products.
+
+    dot = <dw, w - ext>, sq_dw = ||dw||^2, sq_ext = ||ext||^2 — any
+    broadcast-compatible shapes (scalars, (P,) kernel accumulators, (W,)
+    per-worker reductions).  Single source of truth for the expanded
+    identity threshold shared by the fused kernel wrapper
+    (kernels/gossip_blend/ops.py) and the SPMD fused gate (core/gossip.py).
+
+    Returns f32 gates in {0., 1.}.
+    """
+    nonempty = sq_ext > 0.0
+    if use_parzen:
+        improves = (2.0 * eps * dot - eps * eps * sq_dw) > 0.0
+        return jnp.where(improves & nonempty, 1.0, 0.0)
+    return jnp.where(nonempty, 1.0, 0.0)
+
+
 def empty_state_mask(w_j):
     """Paper eq. (3) lambda: an all-zero buffer means 'no message received'.
 
     Returns 1.0 if ||w_j||_2 > 0 (a real message), else 0.0.
     """
-    from .tree import tree_sq_norm
-
     return (tree_sq_norm(w_j) > 0.0).astype(jnp.float32)

@@ -1,0 +1,1 @@
+from .ops import gossip_blend, gossip_blend_packed, gossip_gates

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: batched fused ASGD gossip blend (paper eqs. 4-6).
+
+Generalizes repro/kernels/parzen_blend from one external (P=1) to a stacked
+``(P, R, LANE)`` array of P received states — the real shape of a gossip
+round with N receive buffers.  HBM traffic per round, in full-state sweeps:
+
+  naive (core.asgd.blend_externals, a Python loop over externals):
+    per external ~4 state-sized traversals — empty_state_mask reads ext,
+    parzen_gate re-materializes ``w - eps*dw`` and takes two tree_sq_dist
+    passes, the accumulation re-reads acc and ext — so ≈ 4P sweeps total
+    (≈ 11P counting every read+write), growing linearly in P.
+
+  fused (this kernel): exactly TWO passes over the stacked externals,
+    independent of P:
+      pass 1 (gossip_reduce): one sweep accumulating all 3P reduction
+        terms at once — per external p the gate inner products
+        <dw, w-ext_p> and ||ext_p||^2, plus the shared ||dw||^2 — using
+        the expanded eq.-(4) identity from core/parzen.py:
+          d_before - d_after = 2*eps*<dw, w-ext> - eps^2*||dw||^2
+      pass 2 (gossip_apply): the gated mean of eq. (6) applied
+        elementwise with the P admission gates as scalars:
+          w <- w - eps*((w - (sum_p g_p ext_p + w)/(sum_p g_p + 1)) + dw)
+    Total bytes: (P+2) + (P+3) state-sizes vs ~11P+5 for the loop — the
+    per-external cost approaches 2 sweeps, benchmarked in
+    benchmarks/spmd_step.py:kernel_vs_ref.
+
+Grid: 1-D over row blocks of the state viewed as (R, LANE) with LANE=512
+f32 lanes; the P axis lives entirely inside each block (states are blended
+P-at-a-time, P is small — the paper's N receive buffers, typically <= 8).
+Reductions accumulate in a (P, 3) VMEM output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import LANE, resolve_interpret
+
+
+def _reduce_kernel(w_ref, dw_ref, ext_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)          # (br, LANE)
+    dw = dw_ref[...].astype(jnp.float32)        # (br, LANE)
+    ext = ext_ref[...].astype(jnp.float32)      # (P, br, LANE)
+    dot = jnp.sum(dw[None] * (w[None] - ext), axis=(1, 2))   # (P,)
+    sq_ext = jnp.sum(ext * ext, axis=(1, 2))                 # (P,)
+    sq_dw = jnp.sum(dw * dw)                                 # shared scalar
+    acc_ref[:, 0] += dot
+    acc_ref[:, 1] += sq_ext
+    acc_ref[:, 2] += sq_dw      # replicated across P rows (read row 0)
+
+
+def _apply_kernel(w_ref, dw_ref, ext_ref, gates_ref, inv_denom_ref, out_ref,
+                  *, eps, elastic, elastic_alpha):
+    w = w_ref[...].astype(jnp.float32)
+    dw = dw_ref[...].astype(jnp.float32)
+    ext = ext_ref[...].astype(jnp.float32)      # (P, br, LANE)
+    g = gates_ref[...]                          # (P, 1)
+    inv_denom = inv_denom_ref[0, 0]
+    # gated mean of {admitted externals} ∪ {w}: eq. (6) bracket
+    mean = inv_denom * (w + jnp.sum(g[:, :, None] * ext, axis=0))
+    attraction = w - mean
+    if elastic:
+        out = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        out = w - eps * (attraction + dw)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gossip_reduce_pallas(w2d, dw2d, ext3d, *, block_rows=64, interpret=None):
+    """w2d/dw2d: (R, LANE); ext3d: (P, R, LANE); R % block_rows == 0.
+
+    Returns (P, 3) f32: per external p
+      [:, 0] = <dw, w - ext_p>
+      [:, 1] = ||ext_p||^2
+      [:, 2] = ||dw||^2  (same value in every row)
+    """
+    r = w2d.shape[0]
+    p = ext3d.shape[0]
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    acc = pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[spec, spec,
+                  pl.BlockSpec((p, block_rows, LANE), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((p, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 3), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(w2d, dw2d, ext3d)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "elastic", "elastic_alpha", "block_rows", "interpret"))
+def gossip_apply_pallas(w2d, dw2d, ext3d, gates, inv_denom, *, eps,
+                        elastic=False, elastic_alpha=0.5, block_rows=64,
+                        interpret=None):
+    """Pass 2: elementwise gated mean + step with P scalar gates.
+
+    gates: (P,) f32 in {0., 1.}; inv_denom: scalar f32 = 1/(sum gates + 1).
+    Returns the updated (R, LANE) state.
+    """
+    r = w2d.shape[0]
+    p = ext3d.shape[0]
+    grid = (r // block_rows,)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_apply_kernel, eps=eps, elastic=elastic,
+                          elastic_alpha=elastic_alpha),
+        grid=grid,
+        in_specs=[spec, spec,
+                  pl.BlockSpec((p, block_rows, LANE), lambda i: (0, i, 0)),
+                  pl.BlockSpec((p, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, w2d.dtype),
+        interpret=resolve_interpret(interpret),
+    )(w2d, dw2d, ext3d, gates.reshape(p, 1),
+      jnp.asarray(inv_denom, jnp.float32).reshape(1, 1))

@@ -1,0 +1,81 @@
+"""Public wrappers for the batched fused gossip blend kernel.
+
+Two entry points:
+
+  * :func:`gossip_blend_packed` — operates directly on the pack-once
+    ``(R, LANE)`` layout from repro.core.packing; this is the hot path used
+    by ``asgd_update_fused``: the state is packed once per step and carried
+    through both kernel passes with no re-flattening.
+  * :func:`gossip_blend` — flat-vector convenience (pads/reshapes per call)
+    for tests and benchmarks on raw ``(N,)`` states.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.parzen import gate_from_terms
+
+from .kernel import (LANE, gossip_apply_pallas, gossip_reduce_pallas)
+
+
+def _to_2d(x, rows_mult):
+    n = x.shape[-1]
+    rows = -(-n // LANE)
+    rows_p = -(-rows // rows_mult) * rows_mult
+    x2 = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, rows_p * LANE - n)])
+    return x2.reshape(x.shape[:-1] + (rows_p, LANE))
+
+
+def gossip_gates(acc, eps, *, use_parzen: bool = True):
+    """Admission gates from the pass-1 accumulator (eq. 3 x eq. 4).
+
+    acc: (P, 3) from gossip_reduce_pallas. Returns gates (P,) f32 in {0,1}.
+    The expanded-identity threshold itself lives in
+    core.parzen.gate_from_terms (shared with the SPMD fused gate).
+    """
+    return gate_from_terms(acc[:, 0], acc[:, 2], acc[:, 1], eps,
+                           use_parzen=use_parzen)
+
+
+def gossip_blend_packed(w2d, dw2d, ext3d, eps, *, use_parzen: bool = True,
+                        elastic: bool = False, elastic_alpha: float = 0.5,
+                        block_rows: int = 64, interpret=None):
+    """Fused multi-external ASGD update on pre-packed states.
+
+    w2d, dw2d: (R, LANE); ext3d: (P, R, LANE) — all from packing.pack.
+    Returns (w_next (R, LANE), gates (P,) f32).  Two HBM passes total,
+    independent of P.
+    """
+    p = ext3d.shape[0]
+    if p == 0:
+        return w2d - eps * dw2d, jnp.zeros((0,), jnp.float32)
+    acc = gossip_reduce_pallas(w2d, dw2d, ext3d, block_rows=block_rows,
+                               interpret=interpret)
+    gates = gossip_gates(acc, eps, use_parzen=use_parzen)
+    inv_denom = 1.0 / (jnp.sum(gates) + 1.0)
+    out = gossip_apply_pallas(
+        w2d, dw2d, ext3d, gates, inv_denom, eps=float(eps),
+        elastic=elastic, elastic_alpha=float(elastic_alpha),
+        block_rows=block_rows, interpret=interpret)
+    return out, gates
+
+
+def gossip_blend(w, exts, dw, eps, *, use_parzen: bool = True,
+                 elastic: bool = False, elastic_alpha: float = 0.5,
+                 block_rows: int = 64, interpret=None):
+    """Fused ASGD update for a flat state with P externals (eqs. 4-6).
+
+    w, dw: (N,) float; exts: (P, N). Returns (w_next (N,), gates (P,)).
+    Zero-padding is exact: pads contribute 0 to every reduction and the
+    blend maps 0 -> 0 in padded positions.
+    """
+    orig_dtype = w.dtype
+    n = w.shape[0]
+    w2 = _to_2d(w.astype(jnp.float32), block_rows)
+    d2 = _to_2d(dw.astype(jnp.float32), block_rows)
+    e3 = _to_2d(exts.astype(jnp.float32), block_rows)
+    out2, gates = gossip_blend_packed(
+        w2, d2, e3, eps, use_parzen=use_parzen, elastic=elastic,
+        elastic_alpha=elastic_alpha, block_rows=block_rows,
+        interpret=interpret)
+    return out2.reshape(-1)[:n].astype(orig_dtype), gates

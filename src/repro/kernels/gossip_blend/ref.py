@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the batched fused gossip blend (eqs. 4-6, P externals).
+
+Also serves as the CPU stand-in for the fused dataflow in benchmarks: it is
+the same batched two-pass computation the Pallas kernel performs, expressed
+as XLA-fusible jnp ops over the stacked externals.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_blend_ref(w, exts, dw, eps, *, use_parzen: bool = True,
+                     elastic: bool = False, elastic_alpha: float = 0.5):
+    """Multi-external ASGD update, batched over P stacked externals.
+
+    w, dw: (N,) f32; exts: (P, N). Returns (w_next (N,), gates (P,)).
+
+      gate_p = [||(w - eps*dw) - ext_p||^2 < ||w - ext_p||^2] * [||ext_p|| > 0]
+      mean   = (w + sum_p gate_p * ext_p) / (sum_p gate_p + 1)
+      w_next = w - eps * ((w - mean) + dw)          (paper mode)
+      w_next = (w - eps*dw) - alpha * (w - mean)    (elastic variant)
+    """
+    w = w.astype(jnp.float32)
+    dw = dw.astype(jnp.float32)
+    exts = exts.astype(jnp.float32)
+    stepped = w - eps * dw
+    d_after = jnp.sum((stepped[None] - exts) ** 2, axis=1)
+    d_before = jnp.sum((w[None] - exts) ** 2, axis=1)
+    nonempty = jnp.sum(exts * exts, axis=1) > 0.0
+    if use_parzen:
+        gates = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    else:
+        gates = jnp.where(nonempty, 1.0, 0.0)
+    denom = jnp.sum(gates) + 1.0
+    mean = (w + jnp.sum(gates[:, None] * exts, axis=0)) / denom
+    attraction = w - mean
+    if elastic:
+        w_next = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        w_next = w - eps * (attraction + dw)
+    return w_next, gates
+
+
+def gossip_blend_batched(w, exts, dw, eps, *, use_parzen: bool = True,
+                         elastic: bool = False, elastic_alpha: float = 0.5):
+    """The kernel's actual two-pass dataflow in jnp: matvec reductions.
+
+    Same math as gossip_blend_ref but via the expanded eq.-(4) identity —
+    no (P, N) broadcast temporaries are materialized, only (P,) matvec
+    reductions over the stacked externals + one elementwise pass.  This is
+    the CPU/XLA stand-in for the Pallas kernel in benchmarks (interpret
+    mode measures the interpreter, not the memory system).
+    """
+    w = w.astype(jnp.float32)
+    dw = dw.astype(jnp.float32)
+    exts = exts.astype(jnp.float32)
+    # pass 1: all 3P reduction terms, one sweep of the stack per term
+    dot = jnp.dot(dw, w) - exts @ dw            # <dw, w - ext_p>  (P,)
+    sq_ext = jnp.einsum("pn,pn->p", exts, exts)
+    nonempty = sq_ext > 0.0
+    if use_parzen:
+        sq_dw = jnp.dot(dw, dw)
+        improves = (2.0 * eps * dot - eps * eps * sq_dw) > 0.0
+        gates = jnp.where(improves & nonempty, 1.0, 0.0)
+    else:
+        gates = jnp.where(nonempty, 1.0, 0.0)
+    # pass 2: gated mean + step
+    denom = jnp.sum(gates) + 1.0
+    mean = (w + gates @ exts) / denom
+    attraction = w - mean
+    if elastic:
+        w_next = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        w_next = w - eps * (attraction + dw)
+    return w_next, gates

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, idx_ref, sums_ref, counts_ref):
     i = pl.program_id(0)
@@ -52,7 +54,7 @@ def _kernel(x_ref, w_ref, idx_ref, sums_ref, counts_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "interpret"))
-def kmeans_assign_pallas(x, w, *, bm: int = 256, interpret: bool = True):
+def kmeans_assign_pallas(x, w, *, bm: int = 256, interpret=None):
     """x: (M, D) f32, w: (K, D) f32; M % bm == 0 (ops.py pads).
 
     Returns (idx (M,), sums (K, D), counts (K,)).
@@ -81,6 +83,6 @@ def kmeans_assign_pallas(x, w, *, bm: int = 256, interpret: bool = True):
             jax.ShapeDtypeStruct((k, d), jnp.float32),
             jax.ShapeDtypeStruct((k, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, w)
     return idx[:, 0], sums, counts[:, 0]

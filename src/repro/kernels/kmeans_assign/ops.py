@@ -10,7 +10,7 @@ def _pad_to(n, mult):
     return (n + mult - 1) // mult * mult
 
 
-def kmeans_assign(x, w, *, bm: int = 256, interpret: bool = True):
+def kmeans_assign(x, w, *, bm: int = 256, interpret=None):
     """Fused E/M step. x: (M, D), w: (K, D) any float dtype.
 
     Pads M to a multiple of bm, K to a multiple of 8 and D to a multiple of

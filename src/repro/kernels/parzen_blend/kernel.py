@@ -1,8 +1,13 @@
-"""Pallas TPU kernels: fused ASGD Parzen gate + blend (paper eqs. 4-6).
+"""Pallas TPU kernels: fused ASGD Parzen gate + blend (paper eqs. 4-6),
+single external (P=1).
 
-The naive jnp update sweeps HBM ~5x per gossip round (d_after, d_before,
-nonempty reductions, then the blend, each reading multi-GB states). Fused
-form, two passes:
+HBM-sweep accounting (the update is purely memory-bound, so state-sized
+traversals are the cost model).  The naive pytree path
+(core.asgd.blend_externals) spends ~4 full-state traversal passes PER
+EXTERNAL: empty_state_mask reads ext, parzen_gate re-materializes
+``w - eps*dw`` and takes two tree_sq_dist passes, and the accumulation
+re-reads the running sum — ≈4P passes for P externals (≈11P counting every
+read+write).  The fused form needs exactly two passes:
 
   pass 1 (parzen_reduce): ONE sweep accumulating all three reduction terms
     simultaneously — using the expanded identity from core/parzen.py:
@@ -10,9 +15,10 @@ form, two passes:
     so only <dw, w-ext>, ||dw||^2 and ||ext||^2 are needed.
   pass 2 (parzen_apply): elementwise blend with the scalar gate.
 
-2 HBM sweeps instead of ~5: the gossip update is purely memory-bound, so
-this is a direct ~2.5x on the ASGD overhead (measured in
-benchmarks/spmd_step.py: kernel_vs_ref).
+This module handles P=1 flat states only; the batched generalization that
+fuses all P gates of a gossip round in the same two passes (and the
+pack-once layout that feeds it) lives in repro/kernels/gossip_blend —
+benchmarked side by side in benchmarks/spmd_step.py: kernel_vs_ref.
 
 Grid: 1-D over row blocks of the state viewed as (R, LANE) with
 LANE=512 f32 lanes; reductions accumulate in a (1, 3) VMEM output block.
@@ -25,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 512
+from repro.kernels import LANE, resolve_interpret
 
 
 def _reduce_kernel(w_ref, ext_ref, dw_ref, acc_ref):
@@ -57,7 +63,7 @@ def _apply_kernel(w_ref, ext_ref, dw_ref, gate_ref, out_ref, *, eps):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def parzen_reduce_pallas(w2d, ext2d, dw2d, *, block_rows=64,
-                         interpret=True):
+                         interpret=None):
     """w2d/ext2d/dw2d: (R, LANE); R % block_rows == 0.
     Returns (3,) f32: [<dw, w-ext>, ||dw||^2, ||ext||^2]."""
     r = w2d.shape[0]
@@ -69,7 +75,7 @@ def parzen_reduce_pallas(w2d, ext2d, dw2d, *, block_rows=64,
         in_specs=[spec, spec, spec],
         out_specs=pl.BlockSpec((1, 3), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 3), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(w2d, ext2d, dw2d)
     return acc[0]
 
@@ -77,7 +83,7 @@ def parzen_reduce_pallas(w2d, ext2d, dw2d, *, block_rows=64,
 @functools.partial(jax.jit,
                    static_argnames=("eps", "block_rows", "interpret"))
 def parzen_apply_pallas(w2d, ext2d, dw2d, gate, *, eps, block_rows=64,
-                        interpret=True):
+                        interpret=None):
     """Elementwise blend with scalar gate; returns updated (R, LANE)."""
     r = w2d.shape[0]
     grid = (r // block_rows,)
@@ -89,5 +95,5 @@ def parzen_apply_pallas(w2d, ext2d, dw2d, gate, *, eps, block_rows=64,
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(w2d.shape, w2d.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(w2d, ext2d, dw2d, gate.reshape(1, 1))

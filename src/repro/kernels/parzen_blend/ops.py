@@ -3,19 +3,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import LANE, parzen_apply_pallas, parzen_reduce_pallas
+from repro.core.parzen import gate_from_terms
+from repro.kernels.gossip_blend.ops import _to_2d
+
+from .kernel import parzen_apply_pallas, parzen_reduce_pallas
 
 
-def _to_2d(x, rows_mult):
-    n = x.shape[0]
-    rows = -(-n // LANE)
-    rows_p = -(-rows // rows_mult) * rows_mult
-    pad = rows_p * LANE - n
-    x2 = jnp.pad(x, (0, pad)).reshape(rows_p, LANE)
-    return x2, pad
-
-
-def parzen_blend(w, ext, dw, eps, *, block_rows=64, interpret=True):
+def parzen_blend(w, ext, dw, eps, *, block_rows=64, interpret=None):
     """Fused ASGD update for a flat state (eq. 4-6, one external).
 
     w, ext, dw: (N,) float. Returns (w_next (N,), gate scalar).
@@ -24,16 +18,13 @@ def parzen_blend(w, ext, dw, eps, *, block_rows=64, interpret=True):
     """
     orig_dtype = w.dtype
     n = w.shape[0]
-    w2, _ = _to_2d(w.astype(jnp.float32), block_rows)
-    e2, _ = _to_2d(ext.astype(jnp.float32), block_rows)
-    d2, _ = _to_2d(dw.astype(jnp.float32), block_rows)
+    w2 = _to_2d(w.astype(jnp.float32), block_rows)
+    e2 = _to_2d(ext.astype(jnp.float32), block_rows)
+    d2 = _to_2d(dw.astype(jnp.float32), block_rows)
 
     acc = parzen_reduce_pallas(w2, e2, d2, block_rows=block_rows,
                                interpret=interpret)
-    dot_dw_diff, sq_dw, sq_ext = acc[0], acc[1], acc[2]
-    # d_before - d_after = 2 eps <dw, w-ext> - eps^2 ||dw||^2 > 0
-    improves = (2.0 * eps * dot_dw_diff - eps * eps * sq_dw) > 0.0
-    gate = jnp.where(improves & (sq_ext > 0.0), 1.0, 0.0)
+    gate = gate_from_terms(acc[0], acc[1], acc[2], eps)
 
     out2 = parzen_apply_pallas(w2, e2, d2, gate, eps=float(eps),
                                block_rows=block_rows, interpret=interpret)

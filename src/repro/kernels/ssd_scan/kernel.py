@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
             *, nc):
@@ -80,7 +82,7 @@ def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref, h_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=True):
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=None):
     """x: (BH, S, P) f32, dt: (BH, S, 1), A: (BH, 1), B/C: (BH, S, N);
     S % chunk == 0 (ops.py pads). Returns (y (BH,S,P), h (BH,N,P)).
 
@@ -112,6 +114,6 @@ def ssd_scan_pallas(x, dt, A, B, C, *, chunk=128, interpret=True):
             jax.ShapeDtypeStruct((bh, n, p), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(A, x, dt, B, C)
     return y, h

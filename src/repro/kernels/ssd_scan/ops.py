@@ -6,7 +6,7 @@ import jax.numpy as jnp
 from .kernel import ssd_scan_pallas
 
 
-def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=True):
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
     """Model-layout entry point, mirroring repro.models.ssm.ssd_chunked.
 
     x: (Bb, S, H, P); dt: (Bb, S, H); A: (H,); B, C: (Bb, S, 1, N).

@@ -12,14 +12,37 @@ tests and benches see the single real device).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _auto_mesh(shape, axes):
+    """jax.make_mesh across jax versions: AxisType appeared post-0.4.x;
+    0.4.x meshes behave as Auto already."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """jax.sharding.set_mesh if this jax has it, else a no-op context.
+
+    All launch-path shardings are explicit NamedShardings, so the ambient
+    mesh is only required by newer-jax explicit-axis features.
+    """
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return contextlib.nullcontext()
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _auto_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2):
@@ -27,9 +50,7 @@ def make_host_mesh(data: int = 2, model: int = 2):
     used by tests and the smoke dry-run."""
     n = len(jax.devices())
     data = min(data, max(1, n // model))
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _auto_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

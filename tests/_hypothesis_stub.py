@@ -1,0 +1,107 @@
+"""Deterministic fallback for the ``hypothesis`` library.
+
+The container image does not ship hypothesis and new packages cannot be
+installed, so ``tests/conftest.py`` registers this module under the name
+``hypothesis`` when the real library is absent.  It implements exactly the
+subset the test-suite uses — ``@given`` with positional strategies,
+``@settings(max_examples=..., deadline=...)``, ``st.integers(lo, hi)`` and
+``st.floats(lo, hi)`` — by running each test on a fixed number of
+deterministically seeded samples.  With the real hypothesis installed this
+module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    """Attach the example budget to the test function (order-independent
+    with @given: both decorators just tag/wrap the function)."""
+
+    def deco(fn):
+        inner = getattr(fn, "__wrapped_by_given__", None)
+        if inner is not None:
+            inner.__hypothesis_max_examples__ = max_examples
+        fn.__hypothesis_max_examples__ = max_examples
+        return fn
+
+    return deco
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "__hypothesis_max_examples__",
+                        getattr(fn, "__hypothesis_max_examples__",
+                                _DEFAULT_MAX_EXAMPLES))
+            # cap: the stub exists to exercise the property, not to match
+            # hypothesis' shrinking search
+            n = min(int(n), 25)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn = [s.example(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {i}: args={drawn}"
+                    ) from e
+
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # exposed signature keeps only the leading params (self, fixtures)
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strats)]
+        runner.__signature__ = inspect.Signature(kept)
+        runner.__wrapped_by_given__ = fn
+        del runner.__wrapped__  # wraps() sets it; it re-exposes fn's signature
+        return runner
+
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+
+
+def assume(condition):
+    if not condition:
+        raise AssertionError("stub hypothesis: assume() rejected an example; "
+                             "restructure the test to avoid assume")

@@ -154,8 +154,11 @@ SPMD_SCRIPT = textwrap.dedent("""
     from repro.core.gossip import GossipConfig, init_gossip_state, asgd_gossip_apply
     from repro.core.asgd import ASGDConfig
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    try:  # AxisType appeared in newer jax; 0.4.x meshes are Auto already
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    except (AttributeError, TypeError):
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
     W = 4
     params = {"a": jnp.ones((W, 16, 8)), "b": jnp.zeros((W, 6)),
               "c": jnp.ones((W, 8, 4))}

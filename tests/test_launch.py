@@ -122,9 +122,12 @@ DRYRUN_SCRIPT = textwrap.dedent("""
     mesh = make_host_mesh(data=4, model=2)
     fn, specs = ST.step_and_args(cfg, shape, mesh, GossipConfig(
         shifts=(1, 2), partial_blocks=2))
-    with jax.sharding.set_mesh(mesh):
+    from repro.launch.mesh import mesh_context
+    with mesh_context(mesh):
         compiled = jax.jit(fn).lower(*specs.values()).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0]
     assert cost.get("flops", 0) > 0
     assert "collective-permute" in compiled.as_text()
     print("DRYRUN-SMOKE-OK")
