@@ -17,7 +17,10 @@ from repro.core.asgd import ASGDConfig, asgd_update, asgd_update_fused
 from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
                                init_gossip_state, local_sgd_apply,
                                sync_dp_apply)
-from repro.kernels.gossip_blend.ref import gossip_blend_batched
+from repro.kernels.gossip_blend import gossip_blend_w
+from repro.kernels.gossip_blend.ref import (gossip_blend_batched,
+                                            gossip_blend_ref,
+                                            gossip_blend_w_batched)
 
 from .common import emit, record, time_jax
 
@@ -103,6 +106,36 @@ def _blend_sweep_counts(p: int) -> tuple[int, int, int, int]:
     return naive_passes, fused_passes, naive_bytes, fused_bytes
 
 
+def _spmd_sweep_counts() -> dict:
+    """HBM-byte accounting for one SPMD gossip blend round (P=1 external
+    per worker — the staleness buffer — 'leaves' mode with a partition
+    mask), in units of one full ensemble-state traversal.  Every term
+    scales with W on all sides, so the numbers are worker-count invariant.
+
+    ablation — the original four-traversal gate + per-leaf select
+      (_gossip_gate(single_sweep=False)): stepped materialization (read
+      w+dw, write -> 3), d_after (2), d_before (2), nonempty (1), blend +
+      in-group select (read w+dw+ext, write -> 4) = 12 units, 5 passes.
+    reference — the DEFAULT use_fused=False path (single-sweep jnp
+      reduction _per_worker_reduce3 + blend/select pass): 3 + 4 = 7 units
+      over 2 logical passes — IF XLA fuses each leaf's three reduction
+      terms into one traversal, which XLA:CPU does not and XLA:TPU does
+      not guarantee; the kernel turns that bound into a guarantee.
+    kernel passes — pass 1 reads w+dw+ext+mask (4); pass 2 reads the same
+      and writes w_next (5) = 9 units, exactly 2 passes.
+    kernel incl. packing — the CURRENT wiring re-packs per round
+      (core/gossip.py _fused_blend): 3x pack_w (read+write = 2 each) +
+      mask build (1) + unpack (2) = +9 -> 18 units end-to-end.  The packs
+      are dependency-free elementwise copies (overlappable), but they are
+      real traffic; carrying the packed ensemble across rounds removes
+      them (ROADMAP follow-up).
+    """
+    return {"ablation_passes": 5, "ablation_bytes": 12,
+            "reference_passes": 2, "reference_bytes": 7,
+            "kernel_passes": 2, "kernel_bytes": 9,
+            "kernel_bytes_with_packing": 18}
+
+
 def kernel_vs_ref():
     """Fused multi-external gossip blend vs the reference per-external loop.
 
@@ -164,6 +197,53 @@ def kernel_vs_ref():
                speedup=sweep_speedup, wall_speedup=wall_speedup,
                naive_passes=np_, fused_passes=fp_,
                naive_sweep_bytes=nb, fused_sweep_bytes=fb)
+
+    # --- spmd_worker_batched: the SPMD gossip blend, W local worker
+    # replicas with one external each (ISSUE 2; EXPERIMENTS.md §Perf).
+    # Reference = per-worker python loop over the direct-form blend (the
+    # pytree path's dataflow); fused = the worker-batched einsum mirror
+    # (honest CPU stand-in of the kernel — XLA:CPU cannot fuse the stacked
+    # reductions into one pass the way the TPU kernel does) + the Pallas
+    # kernel itself under interpret auto-mode (interpreter overhead
+    # tracking, not a speedup claim). ---
+    wn = 4
+    nw = 1 << 20  # 4 MiB f32 per worker -> 16 MiB ensemble
+    kw = jax.random.split(jax.random.key(1), 2)
+    w_w = jax.random.normal(kw[0], (wn, nw))
+    dw_w = jax.random.normal(kw[1], (wn, nw)) * 0.1
+    ext_w = (w_w - 0.5 * dw_w)[:, None]            # (W, P=1, N)
+
+    f_loop = jax.jit(lambda w, e, d: jnp.stack(
+        [gossip_blend_ref(w[i], e[i], d[i], acfg.eps)[0]
+         for i in range(wn)]))
+    us_loop = time_jax(f_loop, w_w, ext_w, dw_w)
+
+    f_batched = jax.jit(lambda w, e, d: gossip_blend_w_batched(
+        w, e, d, acfg.eps)[0])
+    us_batched = time_jax(f_batched, w_w, ext_w, dw_w)
+
+    f_kernel = jax.jit(lambda w, e, d: gossip_blend_w(
+        w, e, d, acfg.eps)[0])
+    us_kernel = time_jax(f_kernel, w_w, ext_w, dw_w, iters=2, warmup=1)
+
+    sc = _spmd_sweep_counts()
+    emit(f"spmd/gossip_blend/spmd_worker_batched/W={wn}", us_batched,
+         f"ref_us={us_loop:.1f};"
+         f"sweep_speedup_vs_ablation="
+         f"{sc['ablation_bytes'] / sc['kernel_bytes']:.2f};"
+         f"wall_speedup={us_loop / us_batched:.2f};"
+         f"kernel_passes={sc['kernel_passes']};"
+         f"kernel_bytes={sc['kernel_bytes']};"
+         f"kernel_bytes_with_packing={sc['kernel_bytes_with_packing']};"
+         f"reference_bytes={sc['reference_bytes']};"
+         f"ablation_bytes={sc['ablation_bytes']};"
+         f"pallas_interpret_us={us_kernel:.1f}")
+    record("spmd_worker_batched", W=wn, p=1, n_per_worker=nw,
+           state_mb=wn * nw * 4 / 2**20,
+           ref_ms=us_loop / 1e3, fused_ms=us_batched / 1e3,
+           pallas_interpret_ms=us_kernel / 1e3,
+           speedup=sc["ablation_bytes"] / sc["kernel_bytes"],
+           wall_speedup=us_loop / us_batched, **sc)
 
 
 ALL = [spmd_step_cost, gossip_overhead_pct, kernel_vs_ref]

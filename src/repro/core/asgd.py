@@ -43,10 +43,13 @@ class ASGDConfig:
         the state instead of scaling it by eps inside the gradient step
         (EASGD-style). Paper-faithful mode is elastic=False.
       elastic_alpha: blend strength for the elastic variant.
-      use_fused: route asgd_update through the batched fused Pallas kernel
+      use_fused: route the update through the batched fused Pallas kernel
         (repro.kernels.gossip_blend): all P Parzen gates + the gated mean
         in two HBM passes over the pack-once (R, LANE) state layout,
-        instead of the ~4-sweeps-per-external pytree loop.
+        instead of the ~4-sweeps-per-external pytree loop.  In the SPMD
+        gossip path (core/gossip.py) this selects the worker-batched
+        kernel variant on the (W_local, R, LANE) layout — one launch
+        blends every local worker replica (DESIGN.md §6).
     """
 
     eps: float = 0.05

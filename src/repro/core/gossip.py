@@ -15,9 +15,15 @@ mini-batch):
        'send to one random peer', see DESIGN.md table)
   3. blend the *previous* round's received block (staleness delay >= 1, the
      asynchrony analogue) through the Parzen gate, eq. (4)-(6) — with
-     ASGDConfig.use_fused the gate terms come from the single-traversal
-     fused reduction (_per_worker_reduce3, the SPMD analogue of pass 1 of
-     the kernels/gossip_blend Pallas kernel) instead of four tree sweeps
+     ASGDConfig.use_fused the whole gate + blend runs through the
+     worker-batched gossip_blend Pallas kernel on the pack-once
+     (W_local, R, LANE) layout (core/packing.py pack_w): all W gates and
+     gated means in exactly two guaranteed kernel passes (the per-round
+     pack/unpack boundary adds copy sweeps — honest byte accounting in
+     EXPERIMENTS.md §Perf).  use_fused=False keeps the jnp tree reduction
+     as the reference path (_per_worker_reduce3, the single-traversal jnp
+     mirror of kernel pass 1; _gossip_gate's single_sweep=False selects
+     the original four-traversal ablation form)
   4. store the newly received block in the staleness buffer
 
 Partial-update partitioning (paper §4.4 leaves "the choice of the
@@ -73,6 +79,14 @@ class GossipConfig:
     # 1/b generalized — on TPU the mini-batch is the step, so the interval
     # is expressed in steps). 1 == every step (paper default).
     gossip_every: int = 1
+    # fused-path (ASGDConfig.use_fused) knobs: row-block size of the
+    # pack-once (W_local, R, LANE) kernel layout, and the mesh axis name(s)
+    # to psum the (W_local, P, 3) gate accumulator over when the blend runs
+    # under shard_map with the non-worker state dims also manually sharded
+    # (see launch/mesh.py shard_map_workers + DESIGN.md §2.2). () == no psum
+    # (single-shard states: the in-jit GSPMD path and all tests).
+    fused_block_rows: int = 64
+    gate_psum_axes: tuple = ()
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +234,16 @@ def _per_worker_reduce3(params, grads, ext, mask_tree=None, block_idx=None):
 
 
 def _gossip_gate(params, grads, ext, acfg: ASGDConfig, mask_tree=None,
-                 block_idx=None):
+                 block_idx=None, *, single_sweep: bool = True):
     """Per-worker admission gate (eq. 3 x eq. 4) -> (W,) f32.
 
-    acfg.use_fused selects the single-traversal reduction; otherwise the
-    original four-traversal form is kept (ablation / bitwise reference).
+    The jnp reference path (ASGDConfig.use_fused=False — the kernel route
+    never calls this).  single_sweep=True (default) uses the fused
+    single-traversal reduction (_per_worker_reduce3); single_sweep=False
+    keeps the original four-traversal form (ablation / bitwise reference,
+    exercised in tests/test_gossip_blend.py).
     """
-    if acfg.use_fused:
+    if single_sweep:
         dot, sq_dw, sq_ext = _per_worker_reduce3(
             params, grads, ext, mask_tree, block_idx)
         return gate_from_terms(dot, sq_dw, sq_ext, acfg.eps,
@@ -354,6 +371,39 @@ def asgd_gossip_apply(params, grads, state: GossipState, key,
         gossip_branch, silent_branch, (params, grads, state))
 
 
+def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None):
+    """Gate + blend through the worker-batched Pallas kernel (both modes).
+
+    Pack-once dataflow (core/packing.py): the state trees are each
+    ravelled to the (W_local, R, LANE) layout once per round and both
+    kernel passes run on the packed arrays (the pack/unpack boundary adds
+    copy sweeps until the packed ensemble is carried across rounds — the
+    honest accounting is in EXPERIMENTS.md §Perf).  With groups/ext_idx
+    given ('leaves' mode, partial_blocks > 1) the partial-update
+    restriction enters as a single worker-shared (R, LANE) mask
+    (pack_group_mask) instead of per-leaf jnp.where sweeps; 'rows' mode
+    passes block trees and no mask (every position participates).  Under
+    shard_map each shard sees its local worker slice — cfg.gate_psum_axes
+    globalizes the gate accumulator when the non-worker dims are manually
+    sharded too.
+
+    Returns (blended_tree, gate (W_local,)).
+    """
+    from ..kernels.gossip_blend import gossip_blend_worker_batched
+    from .packing import pack_group_mask, pack_spec_w, pack_w, unpack_w
+
+    spec = pack_spec_w(params, block_rows=cfg.fused_block_rows)
+    mask2 = (pack_group_mask(groups, ext_idx, spec)
+             if groups is not None and cfg.partial_blocks > 1 else None)
+    out3, gates = gossip_blend_worker_batched(
+        pack_w(params, spec), pack_w(grads, spec),
+        pack_w(ext, spec)[:, None],          # (W_local, P=1, R, LANE)
+        acfg.eps, mask2d=mask2, use_parzen=acfg.use_parzen,
+        elastic=acfg.elastic, elastic_alpha=acfg.elastic_alpha,
+        block_rows=spec.block_rows, psum_axes=cfg.gate_psum_axes or None)
+    return unpack_w(out3, spec), gates[:, 0]
+
+
 def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
     groups = leaf_groups(params, cfg.partial_blocks)
     sent = exchange_leaves(params, groups, shift_idx, block_idx, cfg)
@@ -363,17 +413,21 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
     else:
         ext, ext_idx = state.buf, state.buf_idx
 
-    # Parzen gate (eq. 4) restricted to the buffered partition's leaves
-    gate = _gossip_gate(params, grads, ext, acfg, groups, ext_idx)
+    if acfg.use_fused:
+        new_params, gate = _fused_blend(
+            params, grads, ext, cfg, acfg, groups, ext_idx)
+    else:
+        # Parzen gate (eq. 4) restricted to the buffered partition's leaves
+        gate = _gossip_gate(params, grads, ext, acfg, groups, ext_idx)
 
-    def upd(w, g, e, gi):
-        in_group = (gi == ext_idx)  # traced bool scalar, static group id
-        blended = _blend(w, e, g, gate, acfg)
-        plain = (w.astype(jnp.float32)
-                 - acfg.eps * g.astype(jnp.float32)).astype(w.dtype)
-        return jnp.where(in_group, blended, plain)
+        def upd(w, g, e, gi):
+            in_group = (gi == ext_idx)  # traced bool scalar, static group id
+            blended = _blend(w, e, g, gate, acfg)
+            plain = (w.astype(jnp.float32)
+                     - acfg.eps * g.astype(jnp.float32)).astype(w.dtype)
+            return jnp.where(in_group, blended, plain)
 
-    new_params = jax.tree.map(upd, params, grads, ext, groups)
+        new_params = jax.tree.map(upd, params, grads, ext, groups)
     new_state = GossipState(buf=sent, buf_idx=block_idx,
                             step=state.step + 1)
     return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
@@ -394,11 +448,13 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
 
     local_blk = slice_rows(params, ext_idx, p)
     grads_blk = slice_rows(grads, ext_idx, p)
-    gate = _gossip_gate(local_blk, grads_blk, ext, acfg)
-
-    blended = jax.tree.map(
-        lambda w, e, g: _blend(w, e, g, gate, acfg),
-        local_blk, ext, grads_blk)
+    if acfg.use_fused:
+        blended, gate = _fused_blend(local_blk, grads_blk, ext, cfg, acfg)
+    else:
+        gate = _gossip_gate(local_blk, grads_blk, ext, acfg)
+        blended = jax.tree.map(
+            lambda w, e, g: _blend(w, e, g, gate, acfg),
+            local_blk, ext, grads_blk)
     new_params = jax.tree.map(
         lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
     new_params = update_rows(new_params, blended, ext_idx, p)

@@ -82,3 +82,100 @@ def unpack(arr2d, spec: PackSpec):
         out.append(flat[off:off + size].reshape(shape).astype(dtype))
         off += size
     return jax.tree.unflatten(spec.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# worker-batched layout: pytrees with a leading worker axis (the SPMD path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WPackSpec:
+    """Static layout of a leading-worker-axis pytree in the packed
+    ``(n_workers, rows, LANE)`` view (DESIGN.md §6).
+
+    ``shapes``/``sizes`` describe ONE worker's slice (the leading axis is
+    stripped); the same spec therefore works for any local worker count with
+    the same per-worker structure.  Hashable, rides through jit as static.
+    """
+
+    treedef: Any
+    shapes: tuple     # per-worker tail shapes (leading W axis stripped)
+    dtypes: tuple
+    sizes: tuple      # per-worker element counts
+    n: int            # per-worker real elements
+    rows: int         # padded row count, a multiple of block_rows
+    block_rows: int
+    n_workers: int
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANE
+
+
+def pack_spec_w(tree, block_rows: int = 64) -> WPackSpec:
+    """Compute the worker-batched packed layout for ``tree``.
+
+    Every leaf must carry the same leading worker axis W (the SPMD
+    convention, core/gossip.py).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("pack_spec_w: empty pytree")
+    wn = int(leaves[0].shape[0])
+    for l in leaves:
+        if l.ndim < 1 or int(l.shape[0]) != wn:
+            raise ValueError(
+                f"pack_spec_w: every leaf needs leading worker axis {wn}, "
+                f"got shape {l.shape}")
+    shapes = tuple(l.shape[1:] for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
+    sizes = tuple(int(l.size) // wn for l in leaves)
+    n = sum(sizes)
+    rows = -(-max(n, 1) // LANE)
+    rows = -(-rows // block_rows) * block_rows
+    return WPackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                     sizes=sizes, n=n, rows=rows, block_rows=block_rows,
+                     n_workers=wn)
+
+
+def pack_w(tree, spec: WPackSpec):
+    """Ravel a leading-worker-axis ``tree`` into the padded
+    ``(n_workers, rows, LANE)`` f32 layout — ONE sweep per round, shared by
+    both passes of the worker-batched gossip kernel."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(spec.n_workers, -1) for l in leaves],
+        axis=1)
+    flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.n)))
+    return flat.reshape(spec.n_workers, spec.rows, LANE)
+
+
+def unpack_w(arr3d, spec: WPackSpec):
+    """Inverse of :func:`pack_w`: restore (W, ...) shapes and dtypes."""
+    flat = arr3d.reshape(spec.n_workers, -1)[:, :spec.n]
+    out, off = [], 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        out.append(flat[:, off:off + size]
+                   .reshape((spec.n_workers,) + shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def pack_group_mask(groups, block_idx, spec: WPackSpec):
+    """(rows, LANE) f32 partial-update mask for the worker-batched kernel.
+
+    groups: pytree of static leaf group ids (core.gossip.leaf_groups);
+    block_idx: the (traced) partition index exchanged this round.  Element
+    positions whose leaf belongs to ``block_idx`` get 1.0, everything else
+    (including padding) 0.0.  The mask is worker-independent — the partition
+    is drawn once per round for the whole ensemble — so one (rows, LANE)
+    array serves all W workers.
+    """
+    gids = jax.tree.leaves(groups)
+    segs = [jnp.full((size,),
+                     jnp.where(jnp.int32(gid) == block_idx, 1.0, 0.0),
+                     jnp.float32)
+            for gid, size in zip(gids, spec.sizes)]
+    flat = jnp.concatenate(segs) if segs else jnp.zeros((0,), jnp.float32)
+    flat = jnp.pad(flat, (0, spec.padded - spec.n))
+    return flat.reshape(spec.rows, LANE)

@@ -1,1 +1,2 @@
-from .ops import gossip_blend, gossip_blend_packed, gossip_gates
+from .ops import (gossip_blend, gossip_blend_packed, gossip_blend_w,
+                  gossip_blend_worker_batched, gossip_gates)

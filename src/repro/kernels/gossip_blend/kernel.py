@@ -28,6 +28,16 @@ Grid: 1-D over row blocks of the state viewed as (R, LANE) with LANE=512
 f32 lanes; the P axis lives entirely inside each block (states are blended
 P-at-a-time, P is small — the paper's N receive buffers, typically <= 8).
 Reductions accumulate in a (P, 3) VMEM output block.
+
+Worker-batched variants (``*_w_pallas``, DESIGN.md §6): the SPMD gossip path
+(core/gossip.py) holds W_local worker replicas per shard, each with its own
+P externals and its own gates.  The worker axis is a SECOND (leading) Pallas
+grid dimension over ``(W, R, LANE)`` states and ``(W, P, R, LANE)``
+externals — one kernel launch evaluates all W*P gates and all W gated means,
+still in two HBM passes.  An optional ``(R, LANE)`` group mask (shared
+across workers — the partial-update partition is drawn once per round)
+restricts every gate reduction term and the attraction to the exchanged
+partition, which is what 'leaves'-mode partial updates require (paper §4.4).
 """
 from __future__ import annotations
 
@@ -127,3 +137,130 @@ def gossip_apply_pallas(w2d, dw2d, ext3d, gates, inv_denom, *, eps,
         interpret=resolve_interpret(interpret),
     )(w2d, dw2d, ext3d, gates.reshape(p, 1),
       jnp.asarray(inv_denom, jnp.float32).reshape(1, 1))
+
+
+# ---------------------------------------------------------------------------
+# worker-batched variants: (W, R, LANE) states, (W, P, R, LANE) externals
+# ---------------------------------------------------------------------------
+
+def _reduce_w_kernel(*refs, has_mask):
+    if has_mask:
+        w_ref, dw_ref, ext_ref, mask_ref, acc_ref = refs
+    else:
+        w_ref, dw_ref, ext_ref, acc_ref = refs
+    i = pl.program_id(1)        # row-block index (innermost grid dim)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...][0].astype(jnp.float32)       # (br, LANE)
+    dw = dw_ref[...][0].astype(jnp.float32)     # (br, LANE)
+    ext = ext_ref[...][0].astype(jnp.float32)   # (P, br, LANE)
+    if has_mask:
+        # restrict every reduction term to the exchanged partition: masking
+        # dw kills off-partition <dw, w-ext> and ||dw||^2 contributions,
+        # masking ext kills off-partition ||ext||^2 (m in {0,1}, m^2 == m)
+        m = mask_ref[...].astype(jnp.float32)   # (br, LANE), worker-shared
+        dw = dw * m
+        ext = ext * m[None]
+    dot = jnp.sum(dw[None] * (w[None] - ext), axis=(1, 2))   # (P,)
+    sq_ext = jnp.sum(ext * ext, axis=(1, 2))                 # (P,)
+    sq_dw = jnp.sum(dw * dw)                                 # shared scalar
+    acc_ref[0, :, 0] += dot
+    acc_ref[0, :, 1] += sq_ext
+    acc_ref[0, :, 2] += sq_dw   # replicated across P rows (read row 0)
+
+
+def _apply_w_kernel(*refs, eps, elastic, elastic_alpha, has_mask):
+    if has_mask:
+        w_ref, dw_ref, ext_ref, gates_ref, inv_ref, mask_ref, out_ref = refs
+    else:
+        w_ref, dw_ref, ext_ref, gates_ref, inv_ref, out_ref = refs
+    w = w_ref[...][0].astype(jnp.float32)       # (br, LANE)
+    dw = dw_ref[...][0].astype(jnp.float32)
+    ext = ext_ref[...][0].astype(jnp.float32)   # (P, br, LANE)
+    g = gates_ref[...][0]                       # (P,)
+    inv_denom = inv_ref[...][0, 0]
+    mean = inv_denom * (w + jnp.sum(g[:, None, None] * ext, axis=0))
+    attraction = w - mean
+    if has_mask:
+        # off-partition positions take the plain SGD step (the attraction is
+        # defined only on the exchanged partition in 'leaves' mode)
+        attraction = attraction * mask_ref[...].astype(jnp.float32)
+    if elastic:
+        out = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        out = w - eps * (attraction + dw)
+    out_ref[...] = out[None].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gossip_reduce_w_pallas(w3d, dw3d, ext4d, mask2d=None, *, block_rows=64,
+                           interpret=None):
+    """Worker-batched pass 1.  w3d/dw3d: (W, R, LANE); ext4d: (W, P, R, LANE);
+    mask2d: optional (R, LANE) partition mask shared across workers.
+
+    Returns (W, P, 3) f32: per worker w and external p
+      [..., 0] = <dw_w, w_w - ext_wp>   (mask-restricted when given)
+      [..., 1] = ||ext_wp||^2
+      [..., 2] = ||dw_w||^2  (same value in every p row)
+    """
+    wn, r = w3d.shape[:2]
+    p = ext4d.shape[1]
+    grid = (wn, r // block_rows)
+    spec_s = pl.BlockSpec((1, block_rows, LANE), lambda wi, i: (wi, i, 0))
+    spec_e = pl.BlockSpec((1, p, block_rows, LANE),
+                          lambda wi, i: (wi, 0, i, 0))
+    in_specs = [spec_s, spec_s, spec_e]
+    operands = [w3d, dw3d, ext4d]
+    if mask2d is not None:
+        in_specs.append(pl.BlockSpec((block_rows, LANE),
+                                     lambda wi, i: (i, 0)))
+        operands.append(mask2d)
+    return pl.pallas_call(
+        functools.partial(_reduce_w_kernel, has_mask=mask2d is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, p, 3), lambda wi, i: (wi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((wn, p, 3), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "elastic", "elastic_alpha", "block_rows", "interpret"))
+def gossip_apply_w_pallas(w3d, dw3d, ext4d, gates, inv_denom, mask2d=None, *,
+                          eps, elastic=False, elastic_alpha=0.5,
+                          block_rows=64, interpret=None):
+    """Worker-batched pass 2: per-worker gated mean + step.
+
+    gates: (W, P) f32 in {0., 1.}; inv_denom: (W,) f32 = 1/(sum_p g + 1).
+    mask2d: optional (R, LANE) partition mask — masked-out positions take the
+    plain SGD step.  Returns the updated (W, R, LANE) states.
+    """
+    wn, r = w3d.shape[:2]
+    p = ext4d.shape[1]
+    grid = (wn, r // block_rows)
+    spec_s = pl.BlockSpec((1, block_rows, LANE), lambda wi, i: (wi, i, 0))
+    spec_e = pl.BlockSpec((1, p, block_rows, LANE),
+                          lambda wi, i: (wi, 0, i, 0))
+    in_specs = [spec_s, spec_s, spec_e,
+                pl.BlockSpec((1, p), lambda wi, i: (wi, 0)),
+                pl.BlockSpec((1, 1), lambda wi, i: (wi, 0))]
+    operands = [w3d, dw3d, ext4d, gates,
+                jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1)]
+    if mask2d is not None:
+        in_specs.append(pl.BlockSpec((block_rows, LANE),
+                                     lambda wi, i: (i, 0)))
+        operands.append(mask2d)
+    return pl.pallas_call(
+        functools.partial(_apply_w_kernel, eps=eps, elastic=elastic,
+                          elastic_alpha=elastic_alpha,
+                          has_mask=mask2d is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=spec_s,
+        out_shape=jax.ShapeDtypeStruct(w3d.shape, w3d.dtype),
+        interpret=resolve_interpret(interpret),
+    )(*operands)

@@ -1,6 +1,6 @@
 """Public wrappers for the batched fused gossip blend kernel.
 
-Two entry points:
+Entry points:
 
   * :func:`gossip_blend_packed` — operates directly on the pack-once
     ``(R, LANE)`` layout from repro.core.packing; this is the hot path used
@@ -8,14 +8,22 @@ Two entry points:
     through both kernel passes with no re-flattening.
   * :func:`gossip_blend` — flat-vector convenience (pads/reshapes per call)
     for tests and benchmarks on raw ``(N,)`` states.
+  * :func:`gossip_blend_worker_batched` — the SPMD hot path (DESIGN.md §6):
+    W local worker replicas blended in one kernel launch on the
+    worker-batched pack-once layout ``(W, R, LANE)`` from
+    repro.core.packing.pack_w, with an optional partial-update mask.
+  * :func:`gossip_blend_w` — flat worker-batched convenience on raw
+    ``(W, N)`` states for tests and benchmarks.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.parzen import gate_from_terms
 
-from .kernel import (LANE, gossip_apply_pallas, gossip_reduce_pallas)
+from .kernel import (LANE, gossip_apply_pallas, gossip_apply_w_pallas,
+                     gossip_reduce_pallas, gossip_reduce_w_pallas)
 
 
 def _to_2d(x, rows_mult):
@@ -29,11 +37,13 @@ def _to_2d(x, rows_mult):
 def gossip_gates(acc, eps, *, use_parzen: bool = True):
     """Admission gates from the pass-1 accumulator (eq. 3 x eq. 4).
 
-    acc: (P, 3) from gossip_reduce_pallas. Returns gates (P,) f32 in {0,1}.
-    The expanded-identity threshold itself lives in
-    core.parzen.gate_from_terms (shared with the SPMD fused gate).
+    acc: (..., 3) — (P, 3) from gossip_reduce_pallas or (W, P, 3) from
+    gossip_reduce_w_pallas, laid out [dot, ||ext||^2, ||dw||^2].  Returns
+    gates (...,) f32 in {0, 1}.  The expanded-identity threshold itself
+    lives in core.parzen.gate_from_terms (shared with the SPMD fused
+    gate); this is the single place the accumulator layout is decoded.
     """
-    return gate_from_terms(acc[:, 0], acc[:, 2], acc[:, 1], eps,
+    return gate_from_terms(acc[..., 0], acc[..., 2], acc[..., 1], eps,
                            use_parzen=use_parzen)
 
 
@@ -79,3 +89,67 @@ def gossip_blend(w, exts, dw, eps, *, use_parzen: bool = True,
         elastic_alpha=elastic_alpha, block_rows=block_rows,
         interpret=interpret)
     return out2.reshape(-1)[:n].astype(orig_dtype), gates
+
+
+# ---------------------------------------------------------------------------
+# worker-batched entry points (the SPMD path)
+# ---------------------------------------------------------------------------
+
+def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
+                                use_parzen: bool = True, elastic: bool = False,
+                                elastic_alpha: float = 0.5,
+                                block_rows: int = 64, interpret=None,
+                                psum_axes=None):
+    """Fused ASGD update for W local worker replicas on pre-packed states.
+
+    w3d, dw3d: (W, R, LANE); ext4d: (W, P, R, LANE) — from packing.pack_w.
+    mask2d: optional (R, LANE) partial-update mask shared across workers
+      ('leaves' mode); masked-out positions take the plain SGD step and are
+      excluded from every gate reduction term.
+    psum_axes: mesh axis name(s) to psum the (W, P, 3) gate accumulator
+      over — required when running under shard_map with the non-worker dims
+      of the state also manually sharded (each shard then reduces only its
+      slice of every replica; the gates need the global inner products, a
+      (W, P, 3)-sized collective — see DESIGN.md §2.2).
+
+    Returns (w_next (W, R, LANE), gates (W, P) f32).  Two HBM passes over
+    the worker-stacked state, independent of P and W.
+    """
+    wn = w3d.shape[0]
+    p = ext4d.shape[1]
+    if p == 0:
+        return w3d - eps * dw3d, jnp.zeros((wn, 0), jnp.float32)
+    acc = gossip_reduce_w_pallas(w3d, dw3d, ext4d, mask2d,
+                                 block_rows=block_rows, interpret=interpret)
+    if psum_axes:
+        acc = jax.lax.psum(acc, psum_axes)
+    gates = gossip_gates(acc, eps, use_parzen=use_parzen)
+    inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
+    out = gossip_apply_w_pallas(
+        w3d, dw3d, ext4d, gates, inv_denom, mask2d, eps=float(eps),
+        elastic=elastic, elastic_alpha=float(elastic_alpha),
+        block_rows=block_rows, interpret=interpret)
+    return out, gates
+
+
+def gossip_blend_w(w, exts, dw, eps, *, mask=None, use_parzen: bool = True,
+                   elastic: bool = False, elastic_alpha: float = 0.5,
+                   block_rows: int = 64, interpret=None):
+    """Worker-batched fused update for flat states (tests / benchmarks).
+
+    w, dw: (W, N); exts: (W, P, N); mask: optional (N,) in {0, 1}.
+    Returns (w_next (W, N), gates (W, P)).  Zero-padding is exact (pads
+    contribute 0 to every reduction and the blend maps 0 -> 0 there).
+    """
+    orig_dtype = w.dtype
+    wn, n = w.shape
+    w3 = _to_2d(w.astype(jnp.float32), block_rows)
+    d3 = _to_2d(dw.astype(jnp.float32), block_rows)
+    e4 = _to_2d(exts.astype(jnp.float32), block_rows)
+    m2 = (_to_2d(mask.astype(jnp.float32), block_rows)
+          if mask is not None else None)
+    out3, gates = gossip_blend_worker_batched(
+        w3, d3, e4, eps, mask2d=m2, use_parzen=use_parzen, elastic=elastic,
+        elastic_alpha=elastic_alpha, block_rows=block_rows,
+        interpret=interpret)
+    return out3.reshape(wn, -1)[:, :n].astype(orig_dtype), gates

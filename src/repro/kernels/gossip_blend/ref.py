@@ -73,3 +73,87 @@ def gossip_blend_batched(w, exts, dw, eps, *, use_parzen: bool = True,
     else:
         w_next = w - eps * (attraction + dw)
     return w_next, gates
+
+
+# ---------------------------------------------------------------------------
+# worker-batched forms: (W, N) states, (W, P, N) externals
+# ---------------------------------------------------------------------------
+
+def gossip_blend_w_ref(w, exts, dw, eps, *, mask=None, use_parzen: bool = True,
+                       elastic: bool = False, elastic_alpha: float = 0.5):
+    """Per-worker multi-external ASGD update, direct (unexpanded) form.
+
+    w, dw: (W, N) f32; exts: (W, P, N); mask: optional (N,) in {0, 1} —
+    every gate reduction term and the attraction are restricted to mask==1
+    positions (the 'leaves'-mode partial-update partition, shared across
+    workers); masked-out positions take the plain SGD step.
+
+    Equivalent to applying gossip_blend_ref independently to each worker row
+    (with the mask restriction); the oracle for the worker-batched kernel.
+    Returns (w_next (W, N), gates (W, P)).
+    """
+    w = w.astype(jnp.float32)
+    dw = dw.astype(jnp.float32)
+    exts = exts.astype(jnp.float32)
+
+    def sq(x):  # masked sum of squares over the state axis
+        if mask is not None:
+            x = x * mask
+        return jnp.sum(x * x, axis=-1)
+
+    stepped = w - eps * dw
+    d_after = sq(stepped[:, None] - exts)          # (W, P)
+    d_before = sq(w[:, None] - exts)
+    nonempty = sq(exts) > 0.0
+    if use_parzen:
+        gates = jnp.where((d_after < d_before) & nonempty, 1.0, 0.0)
+    else:
+        gates = jnp.where(nonempty, 1.0, 0.0)
+    denom = jnp.sum(gates, axis=1) + 1.0           # (W,)
+    mean = (w + jnp.einsum("wp,wpn->wn", gates, exts)) / denom[:, None]
+    attraction = w - mean
+    if mask is not None:
+        attraction = attraction * mask
+    if elastic:
+        w_next = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        w_next = w - eps * (attraction + dw)
+    return w_next, gates
+
+
+def gossip_blend_w_batched(w, exts, dw, eps, *, mask=None,
+                           use_parzen: bool = True, elastic: bool = False,
+                           elastic_alpha: float = 0.5):
+    """The worker-batched kernel's two-pass dataflow in jnp (einsum form).
+
+    Same math as gossip_blend_w_ref via the expanded eq.-(4) identity — only
+    (W, P) reductions over the stacked externals plus one elementwise pass.
+    The CPU/XLA stand-in for the worker-batched Pallas kernel in benchmarks.
+    """
+    w = w.astype(jnp.float32)
+    dw = dw.astype(jnp.float32)
+    exts = exts.astype(jnp.float32)
+    dwm = dw * mask if mask is not None else dw
+    extm = exts * mask if mask is not None else exts
+    # pass 1: all 3*W*P reduction terms in one sweep of the stack
+    dot = (jnp.einsum("wn,wn->w", dwm, w)[:, None]
+           - jnp.einsum("wn,wpn->wp", dwm, extm))      # <dw, w - ext_p>
+    sq_ext = jnp.einsum("wpn,wpn->wp", extm, extm)
+    nonempty = sq_ext > 0.0
+    if use_parzen:
+        sq_dw = jnp.einsum("wn,wn->w", dwm, dwm)
+        improves = (2.0 * eps * dot - eps * eps * sq_dw[:, None]) > 0.0
+        gates = jnp.where(improves & nonempty, 1.0, 0.0)
+    else:
+        gates = jnp.where(nonempty, 1.0, 0.0)
+    # pass 2: per-worker gated mean + step
+    denom = jnp.sum(gates, axis=1) + 1.0
+    mean = (w + jnp.einsum("wp,wpn->wn", gates, exts)) / denom[:, None]
+    attraction = w - mean
+    if mask is not None:
+        attraction = attraction * mask
+    if elastic:
+        w_next = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        w_next = w - eps * (attraction + dw)
+    return w_next, gates

@@ -61,3 +61,63 @@ def data_axes(mesh) -> tuple:
 def n_worker_groups(mesh) -> int:
     import math
     return math.prod(mesh.shape[a] for a in data_axes(mesh))
+
+
+def local_worker_count(mesh, n_workers: int | None = None) -> int:
+    """Worker replicas resident on ONE shard of the data axes.
+
+    The fused gossip blend (core/gossip.py, ASGDConfig.use_fused) batches
+    the Pallas kernel over exactly this many replicas per shard: the
+    leading worker axis W divided by the number of data shards.  W defaults
+    to n_worker_groups(mesh) (the production configuration, W_local == 1);
+    oversubscribed runs (W a multiple of the group count) get W_local > 1.
+    """
+    groups = n_worker_groups(mesh)
+    n = groups if n_workers is None else n_workers
+    if n % groups:
+        raise ValueError(
+            f"worker count {n} does not divide over {groups} data shards")
+    return n // groups
+
+
+def shard_map_workers(fn, mesh, *, replicated_argnums=()):
+    """shard_map ``fn`` over the mesh's data axes, worker-axis split only.
+
+    The production wiring for the worker-batched fused gossip blend
+    (DESIGN.md §2.2): every argument and output is split along its leading
+    worker axis across (pod+)data and replicated over `model`, so inside
+    ``fn`` each shard sees its local (W_local, ...) worker slice and the
+    Pallas kernel (kernels/gossip_blend ``*_w_pallas``) runs per shard with
+    no re-layout.  Arguments that are worker-SHARED rather than
+    worker-leading — e.g. the (R, LANE) 'leaves'-mode partition mask, whose
+    axis 0 is the packed row dim, not workers — must be named in
+    ``replicated_argnums`` so every shard receives the full array instead
+    of a wrong-axis split.
+
+    The peer exchange stays OUTSIDE this wrapper (the GSPMD jnp.roll ->
+    collective-permute of core/gossip.py) — ``fn`` must be
+    communication-free per worker, which the blend is: the only cross-shard
+    term is the (W_local, P, 3) gate accumulator, and that psum is needed
+    only when the non-worker dims are ALSO manually sharded
+    (GossipConfig.gate_psum_axes).
+
+    check_rep is disabled: pallas_call inside shard_map defeats jax's
+    replication inference.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    wa = data_axes(mesh)
+    if not wa:
+        raise ValueError(
+            f"mesh has no data axes (axis_names={mesh.axis_names}); the "
+            "ASGD worker dimension shards over 'pod'/'data'")
+    split = jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
+    rep = jax.sharding.PartitionSpec()
+    repl = frozenset(replicated_argnums)
+
+    def wrapped(*args):
+        in_specs = tuple(rep if i in repl else split
+                         for i in range(len(args)))
+        return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=split,
+                         check_rep=False)(*args)
+    return wrapped

@@ -26,6 +26,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute subprocess compile tests (deselect with "
+        "-m 'not slow')")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,21 @@
+"""Docs-consistency: every markdown file + §section cited from a Python
+docstring must exist and resolve (tools/check_docs.py — also a CI step).
+"""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_layer_exists():
+    for name in ("README.md", "DESIGN.md", "EXPERIMENTS.md"):
+        assert (ROOT / name).is_file(), f"{name} missing"
+
+
+def test_cited_docs_resolve():
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_docs.py")],
+        capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "docs-consistency OK" in r.stdout

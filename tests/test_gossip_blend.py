@@ -5,6 +5,11 @@ P ∈ {0, 1, 2, 5} externals, f32/bf16 states, empty-buffer externals, both
 paper and elastic modes; gate agreement between the batched kernel and
 parzen_gate / parzen_gate_inner; the pack-once layout roundtrip; and the
 fused SPMD / threaded-simulator mirrors.
+
+ISSUE-2 additions: the worker-batched kernel (W_local ∈ {1, 2, 4} ×
+P ∈ {0, 1, 5} × f32/bf16 against the per-worker reference path, with and
+without the 'leaves'-mode partition mask) and the worker-axis pack/unpack
+roundtrip (core.packing pack_w/unpack_w/pack_group_mask).
 """
 import jax
 import jax.numpy as jnp
@@ -14,12 +19,15 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (ASGDConfig, asgd_update, asgd_update_fused,
                         parzen_gate, parzen_gate_inner)
-from repro.core.packing import LANE, pack, pack_spec, unpack
+from repro.core.packing import (LANE, pack, pack_group_mask, pack_spec,
+                                pack_spec_w, pack_w, unpack, unpack_w)
 from repro.kernels.gossip_blend import (gossip_blend, gossip_blend_packed,
-                                        gossip_gates)
+                                        gossip_blend_w, gossip_gates)
 from repro.kernels.gossip_blend.kernel import gossip_reduce_pallas
 from repro.kernels.gossip_blend.ref import (gossip_blend_batched,
-                                            gossip_blend_ref)
+                                            gossip_blend_ref,
+                                            gossip_blend_w_batched,
+                                            gossip_blend_w_ref)
 
 
 def _flat_case(seed, n, p):
@@ -201,6 +209,102 @@ class TestFusedUpdateProperty:
             np.testing.assert_allclose(a, x - 0.1 * d, rtol=1e-6)
 
 
+def _w_flat_case(seed, wn, n, p, dtype=jnp.float32):
+    """Per-worker states + externals at well-separated blend positions
+    (different positions per worker so gates are not trivially uniform)."""
+    ks = jax.random.split(jax.random.key(seed), 2)
+    w = jax.random.normal(ks[0], (wn, n), dtype)
+    dw = (jax.random.normal(ks[1], (wn, n)) * 0.1).astype(dtype)
+    cs = jnp.array([0.5, -0.5, 1.5, -1.5, 2.5])
+    if p:
+        coef = cs[(jnp.arange(wn)[:, None] + jnp.arange(p)[None]) % 5]
+        exts = (w.astype(jnp.float32)[:, None]
+                - coef[:, :, None] * dw.astype(jnp.float32)[:, None])
+        exts = exts.astype(dtype)
+    else:
+        exts = jnp.zeros((wn, 0, n), dtype)
+    return w, dw, exts
+
+
+class TestWorkerBatchedKernel:
+    """gossip_blend_w (worker-grid Pallas kernel) == the per-worker
+    reference path (gossip_blend_ref applied to each worker row)."""
+
+    @pytest.mark.parametrize("wn", [1, 2, 4])
+    @pytest.mark.parametrize("p", [0, 1, 5])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_per_worker_reference(self, wn, p, dtype):
+        w, dw, exts = _w_flat_case(wn * 10 + p, wn, 700, p, dtype)
+        out, gates = gossip_blend_w(w, exts, dw, 0.1)
+        assert out.dtype == dtype and out.shape == (wn, 700)
+        assert gates.shape == (wn, p)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        for i in range(wn):
+            out_r, g_r = gossip_blend_ref(
+                w[i].astype(jnp.float32), exts[i].astype(jnp.float32),
+                dw[i].astype(jnp.float32), 0.1)
+            np.testing.assert_array_equal(np.asarray(gates[i]),
+                                          np.asarray(g_r))
+            np.testing.assert_allclose(np.asarray(out[i], np.float32),
+                                       np.asarray(out_r), rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("wn", [1, 4])
+    def test_masked_matches_w_ref(self, wn):
+        """'leaves'-mode partition mask: every gate term and the attraction
+        restricted to mask==1; masked-out positions take the plain step."""
+        n, p = 600, 2
+        w, dw, exts = _w_flat_case(3 + wn, wn, n, p)
+        mask = (jnp.arange(n) < 250).astype(jnp.float32)
+        exts = exts * mask          # leaves mode: ext is zero off-partition
+        out, gates = gossip_blend_w(w, exts, dw, 0.1, mask=mask)
+        out_r, g_r = gossip_blend_w_ref(w, exts, dw, 0.1, mask=mask)
+        np.testing.assert_array_equal(np.asarray(gates), np.asarray(g_r))
+        np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-6)
+        # off-partition positions: plain SGD step exactly
+        plain = (w - 0.1 * dw)[:, 250:]
+        np.testing.assert_allclose(np.asarray(out[:, 250:]),
+                                   np.asarray(plain), rtol=1e-6)
+
+    def test_batched_jnp_mirror_matches_ref(self):
+        w, dw, exts = _w_flat_case(7, 4, 2048, 5)
+        out_b, g_b = gossip_blend_w_batched(w, exts, dw, 0.1)
+        out_r, g_r = gossip_blend_w_ref(w, exts, dw, 0.1)
+        np.testing.assert_array_equal(np.asarray(g_b), np.asarray(g_r))
+        np.testing.assert_allclose(out_b, out_r, rtol=1e-5, atol=1e-6)
+
+    def test_p_zero_is_plain_sgd(self):
+        w, dw, exts = _w_flat_case(1, 3, 1000, 0)
+        out, gates = gossip_blend_w(w, exts, dw, 0.1)
+        assert gates.shape == (3, 0)
+        np.testing.assert_allclose(out, w - 0.1 * dw, rtol=1e-6)
+
+    def test_empty_externals_gate_closed(self):
+        wn, n = 2, 1024
+        w, dw, _ = _w_flat_case(0, wn, n, 0)
+        exts = jnp.zeros((wn, 3, n))
+        out, gates = gossip_blend_w(w, exts, dw, 0.2)
+        np.testing.assert_array_equal(np.asarray(gates), np.zeros((wn, 3)))
+        np.testing.assert_allclose(out, w - 0.2 * dw, rtol=1e-5)
+
+    def test_elastic_mode(self):
+        w, dw, exts = _w_flat_case(11, 2, 3000, 3)
+        out, g = gossip_blend_w(w, exts, dw, 0.1, elastic=True,
+                                elastic_alpha=0.3)
+        out_r, g_r = gossip_blend_w_ref(w, exts, dw, 0.1, elastic=True,
+                                        elastic_alpha=0.3)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g_r))
+        np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-6)
+
+    def test_single_worker_matches_flat_kernel(self):
+        """W=1 worker-batched == the original flat kernel bit-for-bit
+        semantics (same two-pass math, same packing)."""
+        w, dw, exts = _w_flat_case(5, 1, 4096, 5)
+        out_w, g_w = gossip_blend_w(w, exts, dw, 0.1)
+        out_f, g_f = gossip_blend(w[0], exts[0], dw[0], 0.1)
+        np.testing.assert_array_equal(np.asarray(g_w[0]), np.asarray(g_f))
+        np.testing.assert_allclose(out_w[0], out_f, rtol=1e-6, atol=1e-7)
+
+
 class TestPacking:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_roundtrip(self, dtype):
@@ -227,8 +331,91 @@ class TestPacking:
         np.testing.assert_array_equal(flat[spec.n:], 0.0)
 
 
+def _w_tree_case(wn, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return {"layer": {"w": jax.random.normal(ks[0], (wn, 17, 9), dtype),
+                      "b": jax.random.normal(ks[1], (wn, 9), dtype)},
+            "head": jax.random.normal(ks[2], (wn, 23), dtype)}
+
+
+class TestWorkerPacking:
+    """Worker-axis pack/unpack roundtrip + the packed partition mask."""
+
+    @pytest.mark.parametrize("wn", [1, 2, 4])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_roundtrip(self, wn, dtype):
+        tree = _w_tree_case(wn, dtype=dtype)
+        spec = pack_spec_w(tree)
+        arr = pack_w(tree, spec)
+        assert arr.shape == (wn, spec.rows, LANE)
+        assert spec.rows % spec.block_rows == 0
+        assert spec.n_workers == wn
+        assert spec.n == 17 * 9 + 9 + 23     # per-worker elements
+        back = unpack_w(arr, spec)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_per_worker_rows_match_flat_pack(self):
+        """Row w of the packed (W, R, LANE) layout == pack() of worker w's
+        slice: the worker axis is purely a batch axis of the flat layout."""
+        tree = _w_tree_case(3)
+        spec_w = pack_spec_w(tree)
+        arr = pack_w(tree, spec_w)
+        for i in range(3):
+            sl = jax.tree.map(lambda x, i=i: x[i], tree)
+            spec_i = pack_spec(sl)
+            np.testing.assert_array_equal(np.asarray(arr[i]),
+                                          np.asarray(pack(sl, spec_i)))
+
+    def test_spec_static_hashable_and_validates(self):
+        tree = _w_tree_case(2)
+        s1, s2 = pack_spec_w(tree), pack_spec_w(tree)
+        assert s1 == s2 and hash(s1) == hash(s2)
+        bad = dict(tree, head=jnp.zeros((3, 23)))  # mismatched worker axis
+        with pytest.raises(ValueError):
+            pack_spec_w(bad)
+
+    def test_group_mask_layout(self):
+        """pack_group_mask marks exactly the selected group's elements."""
+        from repro.core.gossip import leaf_groups
+        tree = _w_tree_case(2)
+        spec = pack_spec_w(tree)
+        groups = leaf_groups(tree, 2)
+        gids = jax.tree.leaves(groups)
+        for g in range(2):
+            m = np.asarray(pack_group_mask(groups, jnp.int32(g),
+                                           spec)).reshape(-1)
+            expect = np.concatenate(
+                [np.full(s, 1.0 if gid == g else 0.0)
+                 for gid, s in zip(gids, spec.sizes)])
+            np.testing.assert_array_equal(m[:spec.n], expect)
+            np.testing.assert_array_equal(m[spec.n:], 0.0)  # padding closed
+
+
 class TestSPMDFusedGate:
-    """gossip.py fused single-traversal reduction == the 4-sweep form."""
+    """gossip.py use_fused=True (worker-batched kernel) == use_fused=False
+    (jnp tree-reduction reference) through full gossip rounds."""
+
+    def test_gate_single_sweep_matches_four_sweep(self):
+        """The two jnp reference forms of the per-worker gate agree: the
+        fused single-traversal reduction (_per_worker_reduce3, the jnp
+        mirror of kernel pass 1) vs the original four-traversal form."""
+        from repro.core.gossip import _gossip_gate, leaf_groups
+        params = {"a": jax.random.normal(jax.random.key(0), (4, 16, 8)),
+                  "b": jax.random.normal(jax.random.key(1), (4, 12))}
+        grads = jax.tree.map(lambda x: 0.01 * x, params)
+        ext = jax.tree.map(lambda x, d: x - 0.5 * d, params, grads)
+        acfg = ASGDConfig(eps=0.05)
+        groups = leaf_groups(params, 2)
+        for blk in (None, jnp.int32(0), jnp.int32(1)):
+            mask = None if blk is None else groups
+            g1 = _gossip_gate(params, grads, ext, acfg, mask, blk,
+                              single_sweep=True)
+            g4 = _gossip_gate(params, grads, ext, acfg, mask, blk,
+                              single_sweep=False)
+            np.testing.assert_array_equal(np.asarray(g1), np.asarray(g4))
 
     @pytest.mark.parametrize("mode", ["leaves", "rows"])
     def test_apply_parity(self, mode):

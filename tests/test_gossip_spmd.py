@@ -145,6 +145,144 @@ class TestGossipApply:
             np.testing.assert_allclose(avg[k][1], avg[k][0], rtol=1e-6)
 
 
+class TestFusedApplyParity:
+    """ISSUE-2 acceptance: asgd_gossip_apply with use_fused=True (the
+    worker-batched gossip_blend kernel on the pack-once (W, R, LANE)
+    layout) blends to the same states as the use_fused=False jnp
+    tree-reduction path, within dtype tolerance."""
+
+    def _run_pair(self, mode, *, delay=1, dtype=jnp.float32, steps=4, W=4,
+                  partial_blocks=2, elastic=False):
+        params0 = jax.tree.map(lambda x: x.astype(dtype), make_params(W=W))
+        grads = jax.tree.map(lambda x: (0.05 * jnp.sign(x)).astype(dtype),
+                             params0)
+        gcfg = GossipConfig(shifts=(1, 2), partial_blocks=partial_blocks,
+                            partial_mode=mode, delay=delay)
+        outs = {}
+        for fused in (False, True):
+            acfg = ASGDConfig(eps=0.05, use_fused=fused, elastic=elastic)
+            p, s = params0, init_gossip_state(params0, gcfg)
+            for i in range(steps):
+                p, s, m = asgd_gossip_apply(
+                    p, grads, s, jax.random.key(i), gcfg, acfg)
+            outs[fused] = (p, m)
+        return outs
+
+    @pytest.mark.parametrize("mode", ["leaves", "rows"])
+    @pytest.mark.parametrize("delay", [0, 1])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fused_matches_reference(self, mode, delay, dtype):
+        outs = self._run_pair(mode, delay=delay, dtype=dtype)
+        np.testing.assert_array_equal(
+            np.asarray(outs[True][1]["gate"]),
+            np.asarray(outs[False][1]["gate"]))
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        for k in outs[True][0]:
+            assert outs[True][0][k].dtype == dtype
+            np.testing.assert_allclose(
+                np.asarray(outs[True][0][k], np.float32),
+                np.asarray(outs[False][0][k], np.float32),
+                rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("mode", ["leaves", "rows"])
+    def test_fused_elastic_matches_reference(self, mode):
+        outs = self._run_pair(mode, elastic=True)
+        for k in outs[True][0]:
+            np.testing.assert_allclose(outs[True][0][k], outs[False][0][k],
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_fused_unmasked_single_block(self):
+        """partial_blocks=1 skips the partition mask entirely (every leaf
+        is exchanged every round) — the mask-free kernel variant."""
+        outs = self._run_pair("leaves", partial_blocks=1)
+        for k in outs[True][0]:
+            np.testing.assert_allclose(outs[True][0][k], outs[False][0][k],
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_fused_silent_equals_local_sgd(self):
+        params0 = make_params()
+        grads = jax.tree.map(lambda x: 0.05 * jnp.sign(x), params0)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=2)
+        acfg = ASGDConfig(eps=0.05, silent=True, use_fused=True)
+        p, s = params0, init_gossip_state(params0, gcfg)
+        for i in range(3):
+            p, s, _ = asgd_gossip_apply(p, grads, s, jax.random.key(i),
+                                        gcfg, acfg)
+        expect = params0
+        for _ in range(3):
+            expect = local_sgd_apply(expect, grads, 0.05)
+        for k in expect:
+            np.testing.assert_allclose(p[k], expect[k], rtol=1e-5)
+
+
+SHARD_MAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import (_auto_mesh, local_worker_count,
+                                   n_worker_groups, shard_map_workers)
+    from repro.kernels.gossip_blend import gossip_blend_worker_batched
+    from repro.core.packing import pack_spec_w, pack_w
+
+    mesh = _auto_mesh((4, 2), ("data", "model"))
+    assert n_worker_groups(mesh) == 4
+    assert local_worker_count(mesh, 8) == 2
+
+    W = 8   # oversubscribed: 2 local workers per data shard
+    ks = jax.random.split(jax.random.key(0), 2)
+    params = {"a": jax.random.normal(ks[0], (W, 20, 30)),
+              "b": jax.random.normal(ks[1], (W, 6))}
+    grads = jax.tree.map(lambda x: 0.1 * x, params)
+    ext = jax.tree.map(lambda x, d: x - 0.5 * d, params, grads)
+
+    spec = pack_spec_w(params, block_rows=8)
+    w3, d3 = pack_w(params, spec), pack_w(grads, spec)
+    e4 = pack_w(ext, spec)[:, None]
+
+    def blend(w3, d3, e4):
+        return gossip_blend_worker_batched(w3, d3, e4, 0.05, block_rows=8)
+
+    ref_out, ref_gates = jax.jit(blend)(w3, d3, e4)
+    out, gates = jax.jit(shard_map_workers(blend, mesh))(w3, d3, e4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gates), np.asarray(ref_gates))
+
+    # 'leaves'-mode partition mask: worker-SHARED (R, LANE) operand, must
+    # be replicated to every shard, not split along its row axis
+    from repro.core.gossip import leaf_groups
+    from repro.core.packing import pack_group_mask
+    mask2 = pack_group_mask(leaf_groups(params, 2), jnp.int32(0), spec)
+
+    def blend_masked(w3, d3, e4, m2):
+        return gossip_blend_worker_batched(w3, d3, e4, 0.05, mask2d=m2,
+                                           block_rows=8)
+
+    ref_out_m, ref_gates_m = jax.jit(blend_masked)(w3, d3, e4, mask2)
+    out_m, gates_m = jax.jit(shard_map_workers(
+        blend_masked, mesh, replicated_argnums=(3,)))(w3, d3, e4, mask2)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(ref_out_m),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(gates_m),
+                                  np.asarray(ref_gates_m))
+    print("SHARD-MAP-OK")
+""")
+
+
+@pytest.mark.slow
+def test_shard_map_worker_batched_kernel():
+    """8-fake-device subprocess: the worker-batched Pallas blend under
+    shard_map_workers (each data shard blends its 2 local worker replicas)
+    matches the single-shard kernel result."""
+    r = subprocess.run(
+        [sys.executable, "-c", SHARD_MAP_SCRIPT], capture_output=True,
+        text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                        "HOME": "/root"}, cwd="/root/repo", timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARD-MAP-OK" in r.stdout
+
+
 SPMD_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Docs-consistency check (ISSUE 2; run by CI and tests/test_docs.py).
+
+Scans every Python file under src/, tests/, benchmarks/ and examples/ for
+documentation citations — a markdown filename, optionally followed by a
+section marker, e.g.::
+
+    DESIGN.md §2.2         EXPERIMENTS.md §Perf        README.md
+
+and fails (exit 1, one line per problem) if
+
+  * the cited markdown file does not exist at the repo root, or
+  * the cited section does not resolve to a real heading in that file.
+
+Section resolution: a heading line whose text contains the section token
+at a token boundary — ``§2.2`` matches the heading ``## §2.2 · SPMD
+gossip`` but not ``## §2.2b · …``.  Exit 0 prints a one-line summary.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+
+# a markdown file name, optionally followed by " §<token>"; dots join
+# sub-numbers ("2.2b") but a trailing sentence period stays out
+REF_RE = re.compile(
+    r"(?P<file>[A-Za-z][\w-]*\.md)"
+    r"(?:\s+§(?P<sect>[\w-]+(?:\.[\w-]+)*))?")
+HEADING_RE = re.compile(r"^#{1,6}\s+(?P<text>.+?)\s*$", re.M)
+
+
+def headings(md_path: pathlib.Path) -> list[str]:
+    return [m.group("text")
+            for m in HEADING_RE.finditer(md_path.read_text())]
+
+
+def section_resolves(heads: list[str], sect: str) -> bool:
+    # token boundary: "2.2" must not match inside "2.2b"
+    pat = re.compile(r"§?" + re.escape(sect) + r"(?![\w])")
+    return any(pat.search(h) for h in heads)
+
+
+def collect_refs():
+    refs = []  # (py_path, lineno, md_name, sect_or_None)
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            for lineno, line in enumerate(
+                    py.read_text().splitlines(), start=1):
+                for m in REF_RE.finditer(line):
+                    refs.append((py.relative_to(ROOT), lineno,
+                                 m.group("file"), m.group("sect")))
+    return refs
+
+
+def main() -> int:
+    refs = collect_refs()
+    head_cache: dict[str, list[str] | None] = {}
+    problems = []
+    for py, lineno, md_name, sect in refs:
+        if md_name not in head_cache:
+            md_path = ROOT / md_name
+            head_cache[md_name] = (headings(md_path)
+                                   if md_path.is_file() else None)
+        heads = head_cache[md_name]
+        if heads is None:
+            problems.append(f"{py}:{lineno}: cited {md_name} is missing")
+            continue
+        if sect is not None and not section_resolves(heads, sect):
+            problems.append(
+                f"{py}:{lineno}: {md_name} has no heading matching §{sect}")
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"docs-consistency: {len(problems)} problem(s) "
+              f"in {len(refs)} citation(s)", file=sys.stderr)
+        return 1
+    files = sorted({r[2] for r in refs})
+    print(f"docs-consistency OK: {len(refs)} citations across "
+          f"{len(files)} docs ({', '.join(files)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
