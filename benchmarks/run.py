@@ -12,6 +12,8 @@ Usage:
   PYTHONPATH=src python -m benchmarks.run fig8 spmd  # substring filter
   PYTHONPATH=src python -m benchmarks.run kernel_vs_ref \
       --out BENCH_gossip_blend.json                  # + JSON records
+  PYTHONPATH=src python -m benchmarks.run kernel_vs_ref_block_rows \
+      --block-rows 32,64,128,256                     # block_rows sweep
 
 --out PATH writes every machine-readable record collected by the selected
 benchmarks (benchmarks.common.record) plus the CSV rows as JSON — the perf
@@ -26,7 +28,7 @@ import traceback
 
 
 def _parse_args(argv):
-    filters, out = [], None
+    filters, out, block_rows = [], None, None
     it = iter(argv)
     for a in it:
         if a == "--out":
@@ -35,15 +37,26 @@ def _parse_args(argv):
                 raise SystemExit("--out requires a path")
         elif a.startswith("--out="):
             out = a.split("=", 1)[1]
+        elif a == "--block-rows":
+            block_rows = next(it, None)
+            if block_rows is None:
+                raise SystemExit("--block-rows requires a comma list")
+        elif a.startswith("--block-rows="):
+            block_rows = a.split("=", 1)[1]
         elif not a.startswith("-"):
             filters.append(a)
-    return filters, out
+    if block_rows is not None:
+        block_rows = tuple(int(x) for x in block_rows.split(",") if x)
+    return filters, out, block_rows
 
 
 def main() -> None:
-    filters, out_path = _parse_args(sys.argv[1:])
+    filters, out_path, block_rows = _parse_args(sys.argv[1:])
 
     from . import paper_figs, roofline_report, spmd_step, stragglers
+    if block_rows:
+        # kernel_vs_ref_block_rows sweep values (spmd_step.py)
+        spmd_step.BLOCK_ROWS_SWEEP = block_rows
     groups = []
     groups += [(f.__name__, f) for f in paper_figs.ALL]
     groups += [(f.__name__, f) for f in spmd_step.ALL]

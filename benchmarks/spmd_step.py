@@ -15,14 +15,21 @@ import jax.numpy as jnp
 
 from repro.core.asgd import ASGDConfig, asgd_update, asgd_update_fused
 from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
-                               init_gossip_state, local_sgd_apply,
-                               sync_dp_apply)
-from repro.kernels.gossip_blend import gossip_blend_w
+                               init_gossip_state, leaf_groups,
+                               local_sgd_apply, sync_dp_apply)
+from repro.core.packing import (LANE, pack_group_mask, pack_spec_w, pack_w,
+                                unpack_w)
+from repro.kernels.gossip_blend import (gossip_blend_w,
+                                        gossip_blend_w_resident)
 from repro.kernels.gossip_blend.ref import (gossip_blend_batched,
                                             gossip_blend_ref,
                                             gossip_blend_w_batched)
 
 from .common import emit, record, time_jax
+
+# block_rows values swept by kernel_vs_ref_block_rows; overridden by
+# ``benchmarks.run ... --block-rows 32,64,128,256``
+BLOCK_ROWS_SWEEP = (32, 64, 128, 256)
 
 
 def _params(W=4, n_mb=8):
@@ -123,17 +130,26 @@ def _spmd_sweep_counts() -> dict:
       not guarantee; the kernel turns that bound into a guarantee.
     kernel passes — pass 1 reads w+dw+ext+mask (4); pass 2 reads the same
       and writes w_next (5) = 9 units, exactly 2 passes.
-    kernel incl. packing — the CURRENT wiring re-packs per round
+    kernel incl. packing — the per-round pack/unpack wiring
       (core/gossip.py _fused_blend): 3x pack_w (read+write = 2 each) +
       mask build (1) + unpack (2) = +9 -> 18 units end-to-end.  The packs
       are dependency-free elementwise copies (overlappable), but they are
-      real traffic; carrying the packed ensemble across rounds removes
-      them (ROADMAP follow-up).
+      real traffic.
+    packed resident — the carried-(W, R, LANE) engine
+      (asgd_gossip_apply_packed + gossip_blend_w_resident): params and the
+      staleness buffer never leave the packed layout and the partition
+      mask is a scalar-prefetched row range (no mask operand), so pass 1
+      reads w+dw+ext (3) and pass 2 reads the same + writes w_next (4);
+      the only per-round copy left is packing the gradient tree (grads are
+      born as a pytree: read+write = 2) = 9 units.  The row-sliced
+      exchange moves |w|/p wire bytes (~1/p unit, not a full sweep —
+      counted in the collective tables, not here).
     """
     return {"ablation_passes": 5, "ablation_bytes": 12,
             "reference_passes": 2, "reference_bytes": 7,
             "kernel_passes": 2, "kernel_bytes": 9,
-            "kernel_bytes_with_packing": 18}
+            "kernel_bytes_with_packing": 18,
+            "packed_resident_passes": 2, "packed_resident_bytes": 9}
 
 
 def kernel_vs_ref():
@@ -245,5 +261,114 @@ def kernel_vs_ref():
            speedup=sc["ablation_bytes"] / sc["kernel_bytes"],
            wall_speedup=us_loop / us_batched, **sc)
 
+    # --- packed_resident: the carried-(W, R, LANE) round (ISSUE 3) vs the
+    # per-round pack/unpack wiring.  Both sides run the same jnp stand-in
+    # blend (the kernel's dataflow — honest CPU proxy); the per-round side
+    # additionally pays 3x pack_w + pack_group_mask + unpack_w, the
+    # resident side only the gradient pack.  The Pallas row-range kernel
+    # (interpret auto-mode) is timed for interpreter-overhead tracking. ---
+    _packed_resident_record()
 
-ALL = [spmd_step_cost, gossip_overhead_pct, kernel_vs_ref]
+
+def _packed_resident_record():
+    wn = 4
+    acfg = ASGDConfig(eps=0.05)
+    ks = jax.random.split(jax.random.key(2), 2)
+    params = {
+        "emb": jax.random.normal(ks[0], (wn, 1024, 512)),
+        "ffw": jax.random.normal(ks[1], (wn, 512, 512)),
+        "out": jax.random.normal(jax.random.key(3), (wn, 256, 512)),
+    }
+    grads = jax.tree.map(lambda x: 0.01 * x, params)
+    p = 2
+    groups = leaf_groups(params, p)
+    spec = pack_spec_w(params, block_rows=64, groups=groups, n_groups=p)
+    n_per_worker = sum(x.size for x in jax.tree.leaves(params)) // wn
+    blk = jnp.int32(0)
+    rr = jnp.asarray(spec.group_row_ranges, jnp.int32)[blk]
+
+    w3 = pack_w(params, spec)
+    d3 = pack_w(grads, spec)
+    ext3 = w3 - 0.5 * d3        # a peer state, already resident
+
+    def per_round(params, grads, ext_tree):
+        """The pre-ISSUE-3 dataflow: pack everything, blend, unpack."""
+        a = pack_w(params, spec).reshape(wn, -1)
+        b = pack_w(grads, spec).reshape(wn, -1)
+        c = pack_w(ext_tree, spec).reshape(wn, 1, -1)
+        m = pack_group_mask(groups, blk, spec).reshape(-1)
+        out, _ = gossip_blend_w_batched(a, c, b, acfg.eps, mask=m)
+        return unpack_w(out.reshape(wn, spec.rows, LANE), spec)
+
+    def resident(w3, d3, ext3):
+        """The packed-resident dataflow: row-range mask, no pack/unpack."""
+        rows = jnp.arange(spec.rows, dtype=jnp.int32)
+        m = jnp.broadcast_to(
+            ((rows >= rr[0]) & (rows < rr[1]))
+            .astype(jnp.float32)[:, None], (spec.rows, LANE)).reshape(-1)
+        out, _ = gossip_blend_w_batched(
+            w3.reshape(wn, -1), ext3.reshape(wn, 1, -1),
+            d3.reshape(wn, -1), acfg.eps, mask=m)
+        return out.reshape(wn, spec.rows, LANE)
+
+    ext_tree = unpack_w(ext3, spec)
+    us_round = time_jax(jax.jit(per_round), params, grads, ext_tree)
+    us_res = time_jax(jax.jit(resident), w3, d3, ext3)
+
+    f_kernel = jax.jit(lambda w, d, e: gossip_blend_w_resident(
+        w, d, e[:, None], rr, acfg.eps, block_rows=spec.block_rows)[0])
+    us_kernel = time_jax(f_kernel, w3, d3, ext3, iters=2, warmup=1)
+
+    sc = _spmd_sweep_counts()
+    emit(f"spmd/gossip_blend/packed_resident/W={wn}", us_res,
+         f"per_round_us={us_round:.1f};"
+         f"wall_speedup={us_round / us_res:.2f};"
+         f"packed_resident_bytes={sc['packed_resident_bytes']};"
+         f"kernel_bytes_with_packing={sc['kernel_bytes_with_packing']};"
+         f"sweep_reduction="
+         f"{sc['kernel_bytes_with_packing'] / sc['packed_resident_bytes']:.2f};"
+         f"pallas_interpret_us={us_kernel:.1f}")
+    record("packed_resident", W=wn, p=p, n_per_worker=n_per_worker,
+           state_mb=wn * n_per_worker * 4 / 2**20,
+           per_round_ms=us_round / 1e3, resident_ms=us_res / 1e3,
+           pallas_interpret_ms=us_kernel / 1e3,
+           wall_speedup=us_round / us_res,
+           sweep_reduction=(sc["kernel_bytes_with_packing"]
+                            / sc["packed_resident_bytes"]), **sc)
+
+
+def kernel_vs_ref_block_rows():
+    """block_rows sweep of the resident kernel (ROADMAP 'autotune
+    block_rows' seed).  On CPU the Pallas timings measure the interpreter
+    (recorded for overhead tracking); the jnp stand-in is block_rows
+    independent, so the sweep's real payload is the per-block_rows kernel
+    records a TPU run can re-measure and compare.  Sweep values come from
+    ``--block-rows`` (benchmarks.run), default 32,64,128,256."""
+    wn = 4
+    nw = 1 << 18    # 1 MiB f32 per worker: keeps the interpreter sweep fast
+    rows_total = nw // LANE
+    acfg = ASGDConfig(eps=0.05)
+    kw = jax.random.split(jax.random.key(4), 2)
+    w3 = jax.random.normal(kw[0], (wn, rows_total, LANE))
+    d3 = jax.random.normal(kw[1], (wn, rows_total, LANE)) * 0.1
+    e4 = (w3 - 0.5 * d3)[:, None]
+    rr = jnp.asarray([0, rows_total // 2], jnp.int32)
+
+    for br in BLOCK_ROWS_SWEEP:
+        if rows_total % br:
+            emit(f"spmd/gossip_blend/block_rows/{br}", 0.0,
+                 f"skipped=rows_{rows_total}_not_divisible")
+            continue
+        f = jax.jit(lambda w, d, e, br=br: gossip_blend_w_resident(
+            w, d, e, rr, acfg.eps, block_rows=br)[0])
+        us = time_jax(f, w3, d3, e4, iters=1, warmup=1)
+        emit(f"spmd/gossip_blend/block_rows/{br}", us,
+             f"W={wn};rows={rows_total};grid={rows_total // br};"
+             f"pallas_interpret=1")
+        record("block_rows_sweep", block_rows=br, W=wn, rows=rows_total,
+               n_per_worker=nw, pallas_interpret_ms=us / 1e3,
+               grid_blocks=rows_total // br)
+
+
+ALL = [spmd_step_cost, gossip_overhead_pct, kernel_vs_ref,
+       kernel_vs_ref_block_rows]

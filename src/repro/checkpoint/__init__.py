@@ -1,1 +1,2 @@
-from .checkpoint import load_checkpoint, save_checkpoint
+from .checkpoint import (load_checkpoint, load_checkpoint_packed,
+                         save_checkpoint, save_checkpoint_packed)

@@ -65,3 +65,54 @@ def load_checkpoint(path, like):
                 f"shape mismatch {arr.shape} vs {want.shape}")
         out.append(arr.astype(want.dtype))
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# pack-aware entry points (DESIGN.md §6): packed-resident runs checkpoint in
+# the CANONICAL pytree layout, so packed and unpacked runs interoperate —
+# the packed (W, R, LANE) ensemble is unpacked exactly here, at the
+# checkpoint boundary (and nowhere inside the training loop)
+# ---------------------------------------------------------------------------
+
+def _packed_state_to_tree(state, spec):
+    """Canonical-layout view of a packed-resident train state: params and
+    the gossip staleness buffer become pytrees (param dtypes restored);
+    everything else passes through."""
+    from ..core.gossip import GossipState
+    from ..core.packing import unpack_w
+
+    out = dict(state)
+    out["params"] = unpack_w(state["params"], spec)
+    g = state["gossip"]
+    out["gossip"] = GossipState(buf=unpack_w(g.buf, spec),
+                                buf_idx=g.buf_idx, step=g.step)
+    return out
+
+
+def save_checkpoint_packed(path, state, spec) -> None:
+    """Save a packed-resident train state ({'params': (W, R, LANE), 'gossip':
+    PackedGossipState, ...}) as a canonical pytree checkpoint.
+
+    The file is bit-identical in structure to one written by an unpacked
+    'leaves'-mode run (GossipState.buf is the full tree, zeros outside the
+    buffered partition), so runs can switch layouts across restarts.
+    Note the canonicalization rounds resident f32 values to the params'
+    storage dtype — the same rounding every unpacked round performs.
+    """
+    save_checkpoint(path, _packed_state_to_tree(state, spec))
+
+
+def load_checkpoint_packed(path, like_state, spec):
+    """Inverse of :func:`save_checkpoint_packed`: restore a canonical
+    checkpoint into the packed-resident layout (re-packs params and the
+    staleness buffer with ``spec``)."""
+    from ..core.gossip import PackedGossipState
+    from ..core.packing import pack_w
+
+    tree = load_checkpoint(path, _packed_state_to_tree(like_state, spec))
+    out = dict(tree)
+    out["params"] = pack_w(tree["params"], spec)
+    g = tree["gossip"]
+    out["gossip"] = PackedGossipState(buf=pack_w(g.buf, spec),
+                                      buf_idx=g.buf_idx, step=g.step)
+    return out

@@ -164,3 +164,25 @@ def asgd_update_fused(w_i, dw_i, externals: Sequence[Any], cfg: ASGDConfig,
         elastic=cfg.elastic, elastic_alpha=cfg.elastic_alpha,
         block_rows=block_rows, interpret=interpret)
     return unpack(out2, spec), jnp.sum(gates)
+
+
+def asgd_update_packed(w2d, dw2d, ext3d, cfg: ASGDConfig, *,
+                       block_rows: int = 64, interpret=None):
+    """Pack-aware ASGD update for callers that CARRY the packed layout.
+
+    w2d, dw2d: (R, LANE); ext3d: (P, R, LANE) — already-packed states
+    (repro.core.packing).  Unlike :func:`asgd_update_fused` this never
+    ravels or restores the pytree: input and output stay in the resident
+    packed representation (DESIGN.md §6), so a driver that keeps its state
+    packed across rounds pays exactly the kernel's two HBM passes and
+    nothing else.  Returns (w2d_next, n_good).
+    """
+    from ..kernels.gossip_blend import gossip_blend_packed
+
+    if cfg.silent or ext3d.shape[0] == 0:
+        return w2d - cfg.eps * dw2d, jnp.float32(0.0)
+    out2, gates = gossip_blend_packed(
+        w2d, dw2d, ext3d, cfg.eps, use_parzen=cfg.use_parzen,
+        elastic=cfg.elastic, elastic_alpha=cfg.elastic_alpha,
+        block_rows=block_rows, interpret=interpret)
+    return out2, jnp.sum(gates)

@@ -26,6 +26,15 @@ mini-batch):
      the original four-traversal ablation form)
   4. store the newly received block in the staleness buffer
 
+Packed-resident rounds (asgd_gossip_apply_packed, DESIGN.md §6): with the
+group-contiguous layout (core/packing.py pack_spec_w(groups=)) the packed
+(W, R, LANE) ensemble is carried ACROSS rounds — the exchange is a static
+slice of packed rows (wire bytes stay |w|/p), the staleness buffer is
+packed rows (PackedGossipState), and the blend is the row-range resident
+kernel (no materialized mask, no pack/unpack inside the round).  The
+per-round pack/unpack boundary of the pytree fused path disappears: 18 ->
+~9 sweep-byte units per round (EXPERIMENTS.md §Perf).
+
 Partial-update partitioning (paper §4.4 leaves "the choice of the
 partitioning to the application"):
   * 'leaves' — p static leaf groups (≈ layer blocks), selected by lax.switch;
@@ -109,29 +118,34 @@ def leaf_groups(params, p: int):
     return jax.tree.unflatten(treedef, gid)
 
 
-def _roll_group(params, groups, g: int, shift: int):
+def _roll_group(params, groups, g: int, shift: int, payload_dtype=None):
     """Branch body: roll group-``g`` leaves by ``shift`` along the worker
-    axis (-> collective-permute); other leaves are local zeros (no comms)."""
-    return jax.tree.map(
-        lambda x, gi: (jnp.roll(x, shift, axis=0) if gi == g
-                       else jnp.zeros_like(x)),
-        params, groups)
+    axis (-> collective-permute); other leaves are local zeros (no comms).
+
+    The wire cast to ``payload_dtype`` happens HERE, on the rolled group's
+    leaves only — casting the whole tree up front would cost a full-state
+    sweep per round for leaves that are never sent."""
+    def f(x, gi):
+        if gi != g:
+            return jnp.zeros_like(
+                x, dtype=payload_dtype if payload_dtype is not None
+                else x.dtype)
+        y = x if payload_dtype is None else x.astype(payload_dtype)
+        return jnp.roll(y, shift, axis=0)
+    return jax.tree.map(f, params, groups)
 
 
 def exchange_leaves(params, groups, shift_idx, block_idx, cfg: GossipConfig):
     """lax.switch over (shift, group) static pairs. Returns the peer block
     (full-tree shape; non-group leaves are zero and were never sent)."""
-    payload = params
-    if cfg.payload_dtype is not None:
-        payload = jax.tree.map(
-            lambda x: x.astype(cfg.payload_dtype), params)
     branches = []
     for s in cfg.shifts:
         for g in range(cfg.partial_blocks):
             branches.append(
-                lambda t, s=s, g=g: _roll_group(t, groups, g, s))
+                lambda t, s=s, g=g: _roll_group(
+                    t, groups, g, s, cfg.payload_dtype))
     idx = shift_idx * cfg.partial_blocks + block_idx
-    return jax.lax.switch(idx, branches, payload)
+    return jax.lax.switch(idx, branches, params)
 
 
 # ---------------------------------------------------------------------------
@@ -461,6 +475,171 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
     new_state = GossipState(buf=sent, buf_idx=block_idx,
                             step=state.step + 1)
     return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
+
+
+# ---------------------------------------------------------------------------
+# packed-resident rounds: the (W, R, LANE) ensemble is the carried training
+# representation (DESIGN.md §6) — exchange AND blend run on packed rows,
+# unpack_w happens only at eval/checkpoint boundaries
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedGossipState:
+    """Carried between packed-resident rounds.
+
+    buf: staleness buffer as packed rows — the (W, R, LANE) f32 array
+      received last round, zeros outside the exchanged partition's row
+      range (the packed analogue of GossipState.buf in 'leaves' mode).
+    buf_idx: which partition index buf holds.
+    step: round counter.
+    """
+
+    buf: Any
+    buf_idx: jnp.ndarray
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.buf, self.buf_idx, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_packed_gossip_state(packed) -> PackedGossipState:
+    """Zero packed staleness buffer (paper eq. 3: all-zero == 'no message
+    yet' — exact on packed rows: padding is zero too)."""
+    return PackedGossipState(buf=jnp.zeros_like(packed),
+                             buf_idx=jnp.int32(0), step=jnp.int32(0))
+
+
+def packed_row_ranges(spec, cfg: GossipConfig) -> tuple:
+    """Static (row_start, row_end) per partition index on the packed layout.
+
+    'leaves' mode reads the group-contiguous ``group_row_ranges`` table the
+    spec was built with (pack_spec_w(groups=leaf_groups(...))); 'rows' mode
+    partitions the packed rows themselves into p contiguous chunks — the
+    packed-space analogue of slicing "along the individual cluster centers"
+    (any contiguous 1/p of the flat state is a valid paper §4.4 partition).
+    """
+    p = cfg.partial_blocks
+    if cfg.partial_mode == "leaves":
+        if spec.group_row_ranges is None:
+            raise ValueError(
+                "packed 'leaves' mode needs a group-contiguous spec: "
+                "pack_spec_w(tree, groups=leaf_groups(tree, p), n_groups=p)")
+        if len(spec.group_row_ranges) != p:
+            raise ValueError(
+                f"spec has {len(spec.group_row_ranges)} group ranges, "
+                f"cfg.partial_blocks={p}")
+        return spec.group_row_ranges
+    chunk = -(-spec.rows // p)
+    return tuple((min(g * chunk, spec.rows), min((g + 1) * chunk, spec.rows))
+                 for g in range(p))
+
+
+def _roll_packed_rows(packed, r0: int, r1: int, shift: int, payload_dtype):
+    """Branch body: roll rows [r0, r1) of the packed ensemble by ``shift``
+    along the worker axis (-> ONE collective-permute of |w|/p bytes); all
+    other rows are local zeros — they were never sent."""
+    blk = packed[:, r0:r1]
+    if payload_dtype is not None:
+        # wire quantization round-trip: the receiver stores packed f32
+        blk = blk.astype(payload_dtype).astype(packed.dtype)
+    rolled = jnp.roll(blk, shift, axis=0)
+    return jnp.zeros_like(packed).at[:, r0:r1].set(rolled)
+
+
+def exchange_packed(packed, ranges, shift_idx, block_idx, cfg: GossipConfig):
+    """lax.switch over (shift, partition) static pairs on packed rows.
+
+    Every branch slices a STATIC row range (the partition index is static
+    inside its branch), so the exchange moves exactly (r1-r0)·LANE·4 ≈
+    |w|/p bytes and never re-lays-out the resident ensemble."""
+    branches = []
+    for s in cfg.shifts:
+        for g in range(cfg.partial_blocks):
+            r0, r1 = ranges[g]
+            branches.append(
+                lambda t, s=s, r0=r0, r1=r1: _roll_packed_rows(
+                    t, r0, r1, s, cfg.payload_dtype))
+    idx = shift_idx * cfg.partial_blocks + block_idx
+    return jax.lax.switch(idx, branches, packed)
+
+
+def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
+                             cfg: GossipConfig, acfg: ASGDConfig, spec):
+    """One packed-resident SPMD ASGD round (paper eqs. 4-7).
+
+    The packed ``(W, R, LANE)`` ensemble (core/packing.py pack_w on a
+    group-contiguous spec) is the carried representation: the partial
+    exchange is a static slice of packed rows -> jnp.roll ->
+    collective-permute, the staleness buffer is packed rows, and the blend
+    runs the row-range resident kernel (gossip_blend_w_resident) — no
+    pack/unpack inside the round, no materialized partition mask.  Sweep
+    accounting: 2 kernel passes reading w+dw+ext (7 byte units) vs 18 for
+    the per-round pack/unpack wiring (EXPERIMENTS.md §Perf).
+
+    Args:
+      packed: (W, R, LANE) f32 resident ensemble.
+      pgrads: (W, R, LANE) packed local steps Delta_M (pack_w of grads —
+        the one remaining pack per round; grads are born as a pytree).
+      state: PackedGossipState staleness buffer.
+      key:   per-step PRNG key — same draw structure as asgd_gossip_apply,
+        so a packed run follows the identical gossip schedule.
+      spec:  the WPackSpec the ensemble was packed with (static).
+
+    Returns (new_packed, new_state, metrics) with the same metrics contract
+    as asgd_gossip_apply.
+    """
+    W = packed.shape[0]
+    if acfg.silent:
+        state = PackedGossipState(state.buf, state.buf_idx, state.step + 1)
+        return packed - acfg.eps * pgrads, state, {
+            "gate": jnp.zeros((W,), jnp.float32), "n_good": jnp.float32(0.0)}
+
+    p = cfg.partial_blocks
+    k_shift, k_blk = jax.random.split(key)
+    shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
+    block_idx = jax.random.randint(k_blk, (), 0, p)
+    ranges = packed_row_ranges(spec, cfg)
+
+    def gossip_branch(args):
+        packed, pgrads, state = args
+        from ..kernels.gossip_blend import gossip_blend_w_resident
+
+        sent = exchange_packed(packed, ranges, shift_idx, block_idx, cfg)
+        if cfg.delay == 0:
+            ext, ext_idx = sent, block_idx
+        else:
+            ext, ext_idx = state.buf, state.buf_idx
+        row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
+        new_packed, gates = gossip_blend_w_resident(
+            packed, pgrads, ext[:, None], row_range, acfg.eps,
+            use_parzen=acfg.use_parzen, elastic=acfg.elastic,
+            elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
+            psum_axes=cfg.gate_psum_axes or None)
+        gate = gates[:, 0]
+        new_state = PackedGossipState(buf=sent, buf_idx=block_idx,
+                                      step=state.step + 1)
+        return new_packed, new_state, {"gate": gate,
+                                       "n_good": jnp.sum(gate)}
+
+    if cfg.gossip_every <= 1:
+        return gossip_branch((packed, pgrads, state))
+
+    def silent_branch(args):
+        packed, pgrads, state = args
+        new_state = PackedGossipState(state.buf, state.buf_idx,
+                                      state.step + 1)
+        zero = jnp.zeros((W,), jnp.float32)
+        return packed - acfg.eps * pgrads, new_state, {
+            "gate": zero, "n_good": jnp.float32(0.0)}
+
+    return jax.lax.cond(
+        state.step % cfg.gossip_every == 0,
+        gossip_branch, silent_branch, (packed, pgrads, state))
 
 
 # ---------------------------------------------------------------------------

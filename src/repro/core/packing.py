@@ -96,6 +96,16 @@ class WPackSpec:
     ``shapes``/``sizes`` describe ONE worker's slice (the leading axis is
     stripped); the same spec therefore works for any local worker count with
     the same per-worker structure.  Hashable, rides through jit as static.
+
+    Group-contiguous variant (``pack_spec_w(..., groups=)``): leaves are
+    laid out partition-by-partition so each 'leaves'-mode group occupies a
+    contiguous, block-rows-aligned row range.  ``group_leaves[g]`` lists the
+    flatten-order leaf indices stored in group ``g`` (layout order) and
+    ``group_row_ranges[g] = (row_start, row_end)`` is the static row-range
+    table: the partial exchange becomes a slice of packed rows and the
+    pass-1 partition mask becomes a row-range comparison the kernel
+    evaluates from scalar prefetch (no materialized ``(R, LANE)`` mask).
+    Both are ``None`` for the plain concatenated layout.
     """
 
     treedef: Any
@@ -106,18 +116,15 @@ class WPackSpec:
     rows: int         # padded row count, a multiple of block_rows
     block_rows: int
     n_workers: int
+    group_leaves: tuple | None = None      # per group: leaf indices
+    group_row_ranges: tuple | None = None  # per group: (row_start, row_end)
 
     @property
     def padded(self) -> int:
         return self.rows * LANE
 
 
-def pack_spec_w(tree, block_rows: int = 64) -> WPackSpec:
-    """Compute the worker-batched packed layout for ``tree``.
-
-    Every leaf must carry the same leading worker axis W (the SPMD
-    convention, core/gossip.py).
-    """
+def _w_leaf_meta(tree):
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         raise ValueError("pack_spec_w: empty pytree")
@@ -130,35 +137,117 @@ def pack_spec_w(tree, block_rows: int = 64) -> WPackSpec:
     shapes = tuple(l.shape[1:] for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype).name for l in leaves)
     sizes = tuple(int(l.size) // wn for l in leaves)
+    return treedef, wn, shapes, dtypes, sizes
+
+
+def pack_spec_w(tree, block_rows: int = 64, groups=None,
+                n_groups: int | None = None) -> WPackSpec:
+    """Compute the worker-batched packed layout for ``tree``.
+
+    Every leaf must carry the same leading worker axis W (the SPMD
+    convention, core/gossip.py).
+
+    groups: optional pytree of static leaf group ids
+      (core.gossip.leaf_groups) selecting the GROUP-CONTIGUOUS layout: each
+      group's leaves occupy a contiguous row range padded up to a
+      block_rows multiple, recorded in ``group_row_ranges``.  Per-group
+      padding costs at most ``n_groups * block_rows * LANE`` elements and
+      buys a sliceable exchange + a mask-free kernel (DESIGN.md §6).
+    n_groups: partition count p; defaults to ``max(group ids) + 1``.  Pass
+      it explicitly when trailing groups may be empty (p > #leaves).
+    """
+    treedef, wn, shapes, dtypes, sizes = _w_leaf_meta(tree)
     n = sum(sizes)
-    rows = -(-max(n, 1) // LANE)
-    rows = -(-rows // block_rows) * block_rows
+    if groups is None:
+        rows = -(-max(n, 1) // LANE)
+        rows = -(-rows // block_rows) * block_rows
+        return WPackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                         sizes=sizes, n=n, rows=rows, block_rows=block_rows,
+                         n_workers=wn)
+    gids = [int(g) for g in jax.tree.leaves(groups)]
+    if len(gids) != len(sizes):
+        raise ValueError("pack_spec_w: groups tree does not match tree")
+    p = (max(gids) + 1) if n_groups is None else int(n_groups)
+    if any(g < 0 or g >= p for g in gids):
+        raise ValueError(f"pack_spec_w: group id out of range [0, {p})")
+    group_leaves, ranges = [], []
+    row = 0
+    for g in range(p):
+        idxs = tuple(i for i, gi in enumerate(gids) if gi == g)
+        size_g = sum(sizes[i] for i in idxs)
+        rows_g = -(-size_g // LANE)
+        rows_g = -(-rows_g // block_rows) * block_rows
+        group_leaves.append(idxs)
+        ranges.append((row, row + rows_g))
+        row += rows_g
     return WPackSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
-                     sizes=sizes, n=n, rows=rows, block_rows=block_rows,
-                     n_workers=wn)
+                     sizes=sizes, n=n, rows=max(row, block_rows),
+                     block_rows=block_rows, n_workers=wn,
+                     group_leaves=tuple(group_leaves),
+                     group_row_ranges=tuple(ranges))
 
 
 def pack_w(tree, spec: WPackSpec):
     """Ravel a leading-worker-axis ``tree`` into the padded
     ``(n_workers, rows, LANE)`` f32 layout — ONE sweep per round, shared by
-    both passes of the worker-batched gossip kernel."""
+    both passes of the worker-batched gossip kernel.
+
+    Group-contiguous specs place each group's leaves in its
+    ``group_row_ranges`` row window (zero padding between groups)."""
     leaves = jax.tree.leaves(tree)
-    flat = jnp.concatenate(
-        [l.astype(jnp.float32).reshape(spec.n_workers, -1) for l in leaves],
-        axis=1)
-    flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.n)))
-    return flat.reshape(spec.n_workers, spec.rows, LANE)
+    wn = spec.n_workers
+    if spec.group_leaves is None:
+        flat = jnp.concatenate(
+            [l.astype(jnp.float32).reshape(wn, -1) for l in leaves],
+            axis=1)
+        flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.n)))
+        return flat.reshape(wn, spec.rows, LANE)
+    cols = []
+    for idxs, (r0, r1) in zip(spec.group_leaves, spec.group_row_ranges):
+        segs = [leaves[i].astype(jnp.float32).reshape(wn, -1) for i in idxs]
+        pad = (r1 - r0) * LANE - sum(spec.sizes[i] for i in idxs)
+        if pad:
+            segs.append(jnp.zeros((wn, pad), jnp.float32))
+        cols.extend(segs)
+    flat = jnp.concatenate(cols, axis=1) if cols \
+        else jnp.zeros((wn, 0), jnp.float32)
+    if flat.shape[1] < spec.padded:   # trailing all-empty groups
+        flat = jnp.pad(flat, ((0, 0), (0, spec.padded - flat.shape[1])))
+    return flat.reshape(wn, spec.rows, LANE)
 
 
 def unpack_w(arr3d, spec: WPackSpec):
     """Inverse of :func:`pack_w`: restore (W, ...) shapes and dtypes."""
-    flat = arr3d.reshape(spec.n_workers, -1)[:, :spec.n]
-    out, off = [], 0
-    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
-        out.append(flat[:, off:off + size]
-                   .reshape((spec.n_workers,) + shape).astype(dtype))
-        off += size
+    wn = spec.n_workers
+    flat = arr3d.reshape(wn, -1)
+
+    def take(off, i):
+        return (flat[:, off:off + spec.sizes[i]]
+                .reshape((wn,) + spec.shapes[i]).astype(spec.dtypes[i]))
+
+    out = [None] * len(spec.sizes)
+    if spec.group_leaves is None:
+        off = 0
+        for i in range(len(spec.sizes)):
+            out[i] = take(off, i)
+            off += spec.sizes[i]
+    else:
+        for idxs, (r0, _) in zip(spec.group_leaves, spec.group_row_ranges):
+            off = r0 * LANE
+            for i in idxs:
+                out[i] = take(off, i)
+                off += spec.sizes[i]
     return jax.tree.unflatten(spec.treedef, out)
+
+
+def group_ranges_array(spec: WPackSpec):
+    """The static ``group_row_ranges`` table as a (p, 2) int32 device array —
+    indexed with the traced partition id to produce the (2,) row-range the
+    resident kernel consumes via scalar prefetch."""
+    if spec.group_row_ranges is None:
+        raise ValueError("group_ranges_array: spec has no group layout "
+                         "(pack_spec_w was called without groups=)")
+    return jnp.asarray(spec.group_row_ranges, jnp.int32)
 
 
 def pack_group_mask(groups, block_idx, spec: WPackSpec):
@@ -170,7 +259,17 @@ def pack_group_mask(groups, block_idx, spec: WPackSpec):
     (including padding) 0.0.  The mask is worker-independent — the partition
     is drawn once per round for the whole ensemble — so one (rows, LANE)
     array serves all W workers.
+
+    On a group-contiguous spec the mask is derived from the static
+    ``group_row_ranges`` table (the packed-resident kernel path skips the
+    materialized mask entirely — this form exists for the legacy masked
+    kernel and for tests).
     """
+    if spec.group_row_ranges is not None:
+        rr = group_ranges_array(spec)[block_idx]
+        rows = jnp.arange(spec.rows, dtype=jnp.int32)
+        m = ((rows >= rr[0]) & (rows < rr[1])).astype(jnp.float32)
+        return jnp.broadcast_to(m[:, None], (spec.rows, LANE))
     gids = jax.tree.leaves(groups)
     segs = [jnp.full((size,),
                      jnp.where(jnp.int32(gid) == block_idx, 1.0, 0.0),

@@ -38,6 +38,15 @@ still in two HBM passes.  An optional ``(R, LANE)`` group mask (shared
 across workers — the partial-update partition is drawn once per round)
 restricts every gate reduction term and the attraction to the exchanged
 partition, which is what 'leaves'-mode partial updates require (paper §4.4).
+
+Packed-resident variants (``*_w_resident_pallas``): on the group-contiguous
+layout (core/packing.py ``pack_spec_w(..., groups=)``) the exchanged
+partition is a contiguous row range, so the mask degenerates to a
+``row_start <= row < row_end`` comparison.  The ``(2,)`` int32 row range
+enters through scalar prefetch (``pltpu.PrefetchScalarGridSpec``) and the
+mask is an in-register iota compare — the ``(R, LANE)`` mask array and its
+HBM read per pass disappear: pass 1 reads exactly w+dw+ext, pass 2 reads
+the same and writes w_next (EXPERIMENTS.md §Perf byte table).
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import LANE, resolve_interpret
 
@@ -264,3 +274,124 @@ def gossip_apply_w_pallas(w3d, dw3d, ext4d, gates, inv_denom, mask2d=None, *,
         out_shape=jax.ShapeDtypeStruct(w3d.shape, w3d.dtype),
         interpret=resolve_interpret(interpret),
     )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# packed-resident variants: row-range partition mask from scalar prefetch
+# (group-contiguous layout, core/packing.py pack_spec_w(groups=))
+# ---------------------------------------------------------------------------
+
+def _row_range_mask(rr_ref, block_idx, block_rows):
+    """(block_rows, LANE) f32 in-register mask: 1.0 where the global row
+    index falls inside the prefetched [row_start, row_end) partition."""
+    rows = block_idx * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, LANE), 0)
+    return ((rows >= rr_ref[0]) & (rows < rr_ref[1])).astype(jnp.float32)
+
+
+def _reduce_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, acc_ref, *,
+                              block_rows):
+    i = pl.program_id(1)        # row-block index (innermost grid dim)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = _row_range_mask(rr_ref, i, block_rows)
+    w = w_ref[...][0].astype(jnp.float32)            # (br, LANE)
+    dw = dw_ref[...][0].astype(jnp.float32) * m
+    ext = ext_ref[...][0].astype(jnp.float32) * m[None]   # (P, br, LANE)
+    dot = jnp.sum(dw[None] * (w[None] - ext), axis=(1, 2))   # (P,)
+    sq_ext = jnp.sum(ext * ext, axis=(1, 2))                 # (P,)
+    sq_dw = jnp.sum(dw * dw)                                 # shared scalar
+    acc_ref[0, :, 0] += dot
+    acc_ref[0, :, 1] += sq_ext
+    acc_ref[0, :, 2] += sq_dw   # replicated across P rows (read row 0)
+
+
+def _apply_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, gates_ref,
+                             inv_ref, out_ref, *, eps, elastic,
+                             elastic_alpha, block_rows):
+    i = pl.program_id(1)
+    m = _row_range_mask(rr_ref, i, block_rows)
+    w = w_ref[...][0].astype(jnp.float32)            # (br, LANE)
+    dw = dw_ref[...][0].astype(jnp.float32)
+    ext = ext_ref[...][0].astype(jnp.float32)        # (P, br, LANE)
+    g = gates_ref[...][0]                            # (P,)
+    inv_denom = inv_ref[...][0, 0]
+    mean = inv_denom * (w + jnp.sum(g[:, None, None] * ext, axis=0))
+    # off-partition positions take the plain SGD step (the attraction is
+    # defined only on the exchanged row range)
+    attraction = (w - mean) * m
+    if elastic:
+        out = (w - eps * dw) - elastic_alpha * attraction
+    else:
+        out = w - eps * (attraction + dw)
+    out_ref[...] = out[None].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d, *,
+                                    block_rows=64, interpret=None):
+    """Packed-resident pass 1.  row_range: (2,) int32 [row_start, row_end)
+    of the exchanged partition (scalar prefetch); w3d/dw3d: (W, R, LANE);
+    ext4d: (W, P, R, LANE).
+
+    Returns (W, P, 3) f32 accumulators as gossip_reduce_w_pallas, with
+    every term restricted to the row range — no mask operand, no mask HBM
+    traffic.
+    """
+    wn, r = w3d.shape[:2]
+    p = ext4d.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(wn, r // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
+            pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
+            pl.BlockSpec((1, p, block_rows, LANE),
+                         lambda wi, i, rr: (wi, 0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p, 3), lambda wi, i, rr: (wi, 0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_reduce_w_resident_kernel, block_rows=block_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((wn, p, 3), jnp.float32),
+        interpret=resolve_interpret(interpret),
+    )(row_range.astype(jnp.int32), w3d, dw3d, ext4d)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps", "elastic", "elastic_alpha", "block_rows", "interpret"))
+def gossip_apply_w_resident_pallas(row_range, w3d, dw3d, ext4d, gates,
+                                   inv_denom, *, eps, elastic=False,
+                                   elastic_alpha=0.5, block_rows=64,
+                                   interpret=None):
+    """Packed-resident pass 2: per-worker gated mean + step, attraction
+    restricted to the prefetched [row_start, row_end) partition; positions
+    outside take the plain SGD step.  Returns the updated (W, R, LANE)
+    states."""
+    wn, r = w3d.shape[:2]
+    p = ext4d.shape[1]
+    spec_s = pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(wn, r // block_rows),
+        in_specs=[
+            spec_s, spec_s,
+            pl.BlockSpec((1, p, block_rows, LANE),
+                         lambda wi, i, rr: (wi, 0, i, 0)),
+            pl.BlockSpec((1, p), lambda wi, i, rr: (wi, 0)),
+            pl.BlockSpec((1, 1), lambda wi, i, rr: (wi, 0)),
+        ],
+        out_specs=spec_s,
+    )
+    return pl.pallas_call(
+        functools.partial(_apply_w_resident_kernel, eps=eps, elastic=elastic,
+                          elastic_alpha=elastic_alpha, block_rows=block_rows),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(w3d.shape, w3d.dtype),
+        interpret=resolve_interpret(interpret),
+    )(row_range.astype(jnp.int32), w3d, dw3d, ext4d, gates,
+      jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1))

@@ -14,6 +14,11 @@ Entry points:
     repro.core.packing.pack_w, with an optional partial-update mask.
   * :func:`gossip_blend_w` — flat worker-batched convenience on raw
     ``(W, N)`` states for tests and benchmarks.
+  * :func:`gossip_blend_w_resident` — the packed-resident SPMD path
+    (DESIGN.md §6): 'leaves'-mode partial updates on the group-contiguous
+    layout enter as a ``(2,)`` scalar-prefetched row range instead of a
+    materialized ``(R, LANE)`` mask, so both passes read exactly the three
+    state operands.
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ import jax.numpy as jnp
 from repro.core.parzen import gate_from_terms
 
 from .kernel import (LANE, gossip_apply_pallas, gossip_apply_w_pallas,
-                     gossip_reduce_pallas, gossip_reduce_w_pallas)
+                     gossip_apply_w_resident_pallas, gossip_reduce_pallas,
+                     gossip_reduce_w_pallas, gossip_reduce_w_resident_pallas)
 
 
 def _to_2d(x, rows_mult):
@@ -127,6 +133,42 @@ def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
     inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
     out = gossip_apply_w_pallas(
         w3d, dw3d, ext4d, gates, inv_denom, mask2d, eps=float(eps),
+        elastic=elastic, elastic_alpha=float(elastic_alpha),
+        block_rows=block_rows, interpret=interpret)
+    return out, gates
+
+
+def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
+                            use_parzen: bool = True, elastic: bool = False,
+                            elastic_alpha: float = 0.5, block_rows: int = 64,
+                            interpret=None, psum_axes=None):
+    """Packed-resident fused ASGD update for W local worker replicas.
+
+    w3d, dw3d: (W, R, LANE); ext4d: (W, P, R, LANE) — the carried packed
+    ensemble (core/packing.py group-contiguous layout); row_range: (2,)
+    int32 [row_start, row_end) of the partition blended this round (from
+    packing.group_ranges_array indexed by the traced partition id).  Same
+    contract as gossip_blend_worker_batched with a partition mask, but the
+    restriction is evaluated in-register from scalar prefetch — no mask
+    array is built or read.  Row ranges may be empty (r0 == r1): every gate
+    is then closed and the update degrades to the plain SGD step.
+
+    Returns (w_next (W, R, LANE), gates (W, P) f32); two HBM passes over
+    the worker-stacked state reading exactly w+dw+ext each.
+    """
+    wn = w3d.shape[0]
+    p = ext4d.shape[1]
+    if p == 0:
+        return w3d - eps * dw3d, jnp.zeros((wn, 0), jnp.float32)
+    acc = gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d,
+                                          block_rows=block_rows,
+                                          interpret=interpret)
+    if psum_axes:
+        acc = jax.lax.psum(acc, psum_axes)
+    gates = gossip_gates(acc, eps, use_parzen=use_parzen)
+    inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
+    out = gossip_apply_w_resident_pallas(
+        row_range, w3d, dw3d, ext4d, gates, inv_denom, eps=float(eps),
         elastic=elastic, elastic_alpha=float(elastic_alpha),
         block_rows=block_rows, interpret=interpret)
     return out, gates

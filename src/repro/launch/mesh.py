@@ -121,3 +121,114 @@ def shard_map_workers(fn, mesh, *, replicated_argnums=()):
         return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=split,
                          check_rep=False)(*args)
     return wrapped
+
+
+# ---------------------------------------------------------------------------
+# manual-axis gossip: exchange (ppermute) + blend (kernel) in ONE region
+# ---------------------------------------------------------------------------
+
+def _ppermute_shift(x, axis_name, n_shards: int, shift: int):
+    """ppermute ``x`` forward by ``shift`` shards (jnp.roll semantics:
+    shard i's data lands on shard (i + shift) % n)."""
+    import jax.lax as lax
+    perm = [(i, (i + shift) % n_shards) for i in range(n_shards)]
+    return lax.ppermute(x, axis_name, perm)
+
+
+def _roll_workers_manual(x, shift: int, axis_name, n_shards: int,
+                         w_local: int):
+    """Global jnp.roll(·, shift, axis=0) over the worker axis, expressed
+    inside the manual region: each shard holds ``w_local`` contiguous
+    workers of the (n_shards * w_local)-ring.
+
+    Decompose shift = q * w_local + r: output local row j takes shard
+    (d - q) local row (j - r) for j >= r and shard (d - q - 1) local row
+    (w_local + j - r) for j < r — one ppermute when r == 0 (the production
+    W_local == 1 case), two otherwise.
+    """
+    shift = shift % (n_shards * w_local)
+    q, r = divmod(shift, w_local)
+
+    def from_shard(d):  # this shard's block, fetched from d shards back
+        d = d % n_shards
+        return x if d == 0 else _ppermute_shift(x, axis_name, n_shards, d)
+
+    a = from_shard(q)
+    if r == 0:
+        return a
+    b = from_shard(q + 1)
+    import jax.numpy as jnp
+    return jnp.concatenate([b[w_local - r:], a[:w_local - r]], axis=0)
+
+
+def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
+    """The whole packed-resident gossip round — exchange AND blend — in one
+    shard_map manual region (DESIGN.md §6).
+
+    Returns a jittable
+    ``round(packed, pgrads, buf, buf_idx, shift_idx, block_idx)
+    -> (new_packed, new_buf, gates)`` over global ``(W, R, LANE)`` arrays.
+    Inside the region each data shard sees its ``(W_local, R, LANE)`` slice;
+    the partial exchange is a static row-slice ``lax.ppermute`` over the
+    (pod+)data axes (wire bytes |w|/p, the paper's one-peer send) and the
+    blend is the row-range resident Pallas kernel
+    (``gossip_blend_w_resident``) — exchange and blend share one manual
+    region, so XLA never re-lays-out the packed ensemble between them.
+    The GSPMD path (core.gossip.asgd_gossip_apply_packed) remains the
+    in-jit formulation of the same round; this is the production wiring.
+
+    spec: group-contiguous WPackSpec (core/packing.py); cfg/acfg:
+    GossipConfig/ASGDConfig; n_workers: global worker count (defaults to
+    the mesh's data-shard count — W_local == 1).
+    """
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    from ..core.gossip import packed_row_ranges
+    from ..kernels.gossip_blend import gossip_blend_w_resident
+
+    wa = data_axes(mesh)
+    if not wa:
+        raise ValueError(
+            f"mesh has no data axes (axis_names={mesh.axis_names})")
+    axis_name = wa if len(wa) > 1 else wa[0]
+    import math
+    n_shards = math.prod(mesh.shape[a] for a in wa)
+    w_local = local_worker_count(mesh, n_workers)
+    ranges = packed_row_ranges(spec, cfg)
+    ranges_arr = jnp.asarray(ranges, jnp.int32)
+    p = cfg.partial_blocks
+
+    def round_fn(packed, pgrads, buf, buf_idx, shift_idx, block_idx):
+        def branch(s, r0, r1):
+            def body(x):
+                blk = x[:, r0:r1]
+                if cfg.payload_dtype is not None:
+                    blk = blk.astype(cfg.payload_dtype).astype(x.dtype)
+                rolled = _roll_workers_manual(blk, s, axis_name, n_shards,
+                                              w_local)
+                return jnp.zeros_like(x).at[:, r0:r1].set(rolled)
+            return body
+
+        branches = [branch(s, r0, r1)
+                    for s in cfg.shifts for (r0, r1) in ranges]
+        sent = jax.lax.switch(shift_idx * p + block_idx, branches, packed)
+        if cfg.delay == 0:
+            ext, ext_idx = sent, block_idx
+        else:
+            ext, ext_idx = buf, buf_idx
+        row_range = ranges_arr[ext_idx]
+        new_packed, gates = gossip_blend_w_resident(
+            packed, pgrads, ext[:, None], row_range, acfg.eps,
+            use_parzen=acfg.use_parzen, elastic=acfg.elastic,
+            elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
+            psum_axes=cfg.gate_psum_axes or None)
+        return new_packed, sent, gates[:, 0]
+
+    split = jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
+    rep = jax.sharding.PartitionSpec()
+    return shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(split, split, split, rep, rep, rep),
+        out_specs=(split, split, split),
+        check_rep=False)

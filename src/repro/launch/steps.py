@@ -160,7 +160,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                     gcfg: GossipConfig | None = None,
                     acfg: ASGDConfig | None = None, remat=True,
-                    spmd_axes=None):
+                    spmd_axes=None, packed_resident=False, pack_spec=None):
     """Returns step(params, gossip, opt_state, batch, key)
             -> (params, gossip, opt_state, metrics).
 
@@ -173,11 +173,21 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
     spmd_axes: mesh axes the worker-vmap dim is sharded over — lets
       sharding hints inside the per-worker model (seq_parallel, MoE
       dispatch) compose with the vmap.
+    packed_resident: carry the packed (W, R, LANE) ensemble across steps
+      (DESIGN.md §6): ``params`` is the packed array, ``gossip`` a
+      PackedGossipState, and the gossip round runs entirely on packed rows
+      (asgd_gossip_apply_packed) — the forward pass reads unpacked VIEWS of
+      the resident buffer (XLA fuses the reshape/slice into the consumers)
+      and the only per-round packing is the gradient tree.  Requires
+      ``pack_spec`` (a group-contiguous WPackSpec for 'leaves' mode).
     """
     from ..optim import (adam_update, momentum_update)
 
     gcfg = gcfg or GossipConfig()
     acfg = acfg or ASGDConfig(eps=0.01)
+    if packed_resident and pack_spec is None:
+        raise ValueError("packed_resident=True requires pack_spec "
+                         "(core.packing.pack_spec_w)")
 
     def per_worker_loss(p, b):
         return M.loss_fn(cfg, p, b, remat=remat)
@@ -219,7 +229,36 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                        "gate": gm["gate"]}
         return new_params, new_gossip, opt_state, metrics
 
-    return step
+    if not packed_resident:
+        return step
+
+    from ..core.gossip import asgd_gossip_apply_packed
+    from ..core.packing import pack_w, unpack_w
+
+    def packed_step(packed, gossip, opt_state, batch, key):
+        params = unpack_w(packed, pack_spec)   # views of the resident buf
+        loss, grads = jax.vmap(jax.value_and_grad(per_worker_loss),
+                               **vmap_kw)(params, batch)
+        dw, opt_state = direction(params, grads, opt_state)
+        pdw = pack_w(dw, pack_spec)            # the one pack per round
+        if algo == "sync":
+            gmean = jnp.mean(pdw, axis=0, keepdims=True)
+            new_packed = packed - acfg.eps * jnp.broadcast_to(
+                gmean, packed.shape)
+            new_gossip = gossip
+            metrics = {"loss": jnp.mean(loss)}
+        elif algo == "silent":
+            new_packed = packed - acfg.eps * pdw
+            new_gossip = gossip
+            metrics = {"loss": jnp.mean(loss)}
+        else:
+            new_packed, new_gossip, gm = asgd_gossip_apply_packed(
+                packed, pdw, gossip, key, gcfg, acfg, pack_spec)
+            metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
+                       "gate": gm["gate"]}
+        return new_packed, new_gossip, opt_state, metrics
+
+    return packed_step
 
 
 def init_inner_state(params, inner="sgd"):

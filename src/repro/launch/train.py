@@ -19,10 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import load_checkpoint, save_checkpoint
+from ..checkpoint import (load_checkpoint, load_checkpoint_packed,
+                          save_checkpoint, save_checkpoint_packed)
 from ..configs.registry import get_arch
 from ..core.asgd import ASGDConfig
-from ..core.gossip import GossipConfig, final_average, init_gossip_state
+from ..core.gossip import (GossipConfig, final_average, init_gossip_state,
+                           init_packed_gossip_state, leaf_groups)
+from ..core.packing import pack_spec_w, pack_w, unpack_w
 from ..data.synthetic import lm_batch_iterator
 from ..models import model as M
 from .steps import make_train_step
@@ -55,6 +58,11 @@ def main(argv=None):
     ap.add_argument("--delay", type=int, default=1)
     ap.add_argument("--elastic", action="store_true",
                     help="beyond-paper elastic blending")
+    ap.add_argument("--packed-resident", action="store_true",
+                    help="carry the packed (W, R, LANE) ensemble across "
+                         "steps (DESIGN.md §6): gossip exchange + blend on "
+                         "packed rows; unpack only at checkpoint/final "
+                         "boundaries")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None, help="checkpoint path")
     ap.add_argument("--restore", default=None,
@@ -76,17 +84,35 @@ def main(argv=None):
         shifts=tuple(s for s in (1, 2, 4, 8) if s < max(W, 2)),
         partial_blocks=args.partial_blocks, delay=args.delay)
     acfg = ASGDConfig(eps=args.eps, elastic=args.elastic)
-    gossip = init_gossip_state(wparams, gcfg)
     from .steps import init_inner_state
-    state = {"params": wparams, "gossip": gossip,
-             "opt": init_inner_state(wparams, args.inner),
-             "step": jnp.int32(0)}
-    if args.restore:
-        state = load_checkpoint(args.restore, state)
-        print(f"restored step={int(state['step'])} from {args.restore}")
+    spec = None
+    if args.packed_resident:
+        # pack ONCE at init; the ensemble stays packed until checkpoint /
+        # final-aggregate boundaries (DESIGN.md §6)
+        spec = pack_spec_w(
+            wparams, block_rows=gcfg.fused_block_rows,
+            groups=leaf_groups(wparams, gcfg.partial_blocks),
+            n_groups=gcfg.partial_blocks)
+        packed = pack_w(wparams, spec)
+        state = {"params": packed,
+                 "gossip": init_packed_gossip_state(packed),
+                 "opt": init_inner_state(wparams, args.inner),
+                 "step": jnp.int32(0)}
+        if args.restore:
+            state = load_checkpoint_packed(args.restore, state, spec)
+            print(f"restored step={int(state['step'])} "
+                  f"from {args.restore} (re-packed)")
+    else:
+        state = {"params": wparams, "gossip": init_gossip_state(wparams, gcfg),
+                 "opt": init_inner_state(wparams, args.inner),
+                 "step": jnp.int32(0)}
+        if args.restore:
+            state = load_checkpoint(args.restore, state)
+            print(f"restored step={int(state['step'])} from {args.restore}")
 
-    step_fn = jax.jit(make_train_step(cfg, algo=args.algo, gcfg=gcfg,
-                                      acfg=acfg, inner=args.inner))
+    step_fn = jax.jit(make_train_step(
+        cfg, algo=args.algo, gcfg=gcfg, acfg=acfg, inner=args.inner,
+        packed_resident=args.packed_resident, pack_spec=spec))
     its = [lm_batch_iterator(
         args.seed * 1000 + w, args.batch, args.seq, cfg.vocab,
         frontend=cfg.frontend, d_model=cfg.d_model,
@@ -115,13 +141,19 @@ def main(argv=None):
                   f" ({time.time() - t0:.1f}s){extra}", flush=True)
 
     # final aggregate (paper §4.3: optional MapReduce step; C5 says the
-    # first worker's model is usually just as good)
-    avg = final_average(state["params"])
+    # first worker's model is usually just as good) — for packed-resident
+    # runs this is the ONE unpack boundary of the whole run
+    final_params = (unpack_w(state["params"], spec)
+                    if args.packed_resident else state["params"])
+    avg = final_average(final_params)
     first_loss = losses[-1]
     print(f"final: last-loss={first_loss:.4f} "
           f"(start {losses[0]:.4f})", flush=True)
     if args.save:
-        save_checkpoint(args.save, state)
+        if args.packed_resident:
+            save_checkpoint_packed(args.save, state, spec)
+        else:
+            save_checkpoint(args.save, state)
         print(f"saved -> {args.save}")
     return losses
 
