@@ -16,14 +16,17 @@ import jax.numpy as jnp
 from repro.core.asgd import ASGDConfig, asgd_update, asgd_update_fused
 from repro.core.gossip import (GossipConfig, asgd_gossip_apply,
                                init_gossip_state, leaf_groups,
-                               local_sgd_apply, sync_dp_apply)
-from repro.core.packing import (LANE, pack_group_mask, pack_spec_w, pack_w,
+                               local_sgd_apply, packed_row_ranges,
+                               sync_dp_apply)
+from repro.core.packing import (LANE, dequantize_rows, pack_group_mask,
+                                pack_spec_w, pack_w, quantize_rows,
                                 unpack_w)
 from repro.kernels.gossip_blend import (gossip_blend_w,
                                         gossip_blend_w_resident)
 from repro.kernels.gossip_blend.ref import (gossip_blend_batched,
                                             gossip_blend_ref,
-                                            gossip_blend_w_batched)
+                                            gossip_blend_w_batched,
+                                            run_quantized_parity)
 
 from .common import emit, record, time_jax
 
@@ -149,7 +152,26 @@ def _spmd_sweep_counts() -> dict:
             "reference_passes": 2, "reference_bytes": 7,
             "kernel_passes": 2, "kernel_bytes": 9,
             "kernel_bytes_with_packing": 18,
-            "packed_resident_passes": 2, "packed_resident_bytes": 9}
+            "packed_resident_passes": 2, "packed_resident_bytes": 9,
+            # int8 wire (ISSUE 4): the external is read as int8 in both
+            # passes (0.25 units each instead of 1) — pass 1 = 2.25,
+            # pass 2 = 3.25, grad pack = 2 -> 7.5 units; the per-block
+            # scales add 4/(block_rows*LANE) of a unit (~0.01%, ignored)
+            "quantized_wire_passes": 2, "quantized_wire_bytes": 7.5}
+
+
+def _wire_bytes(spec, ranges) -> dict:
+    """Exact per-worker collective payload of one partial exchange, in
+    bytes, averaged over the p partitions (the partition is drawn
+    uniformly): f32 wire vs int8 wire (+ the f32 scale sidecar)."""
+    slice_rows_total = sum(r1 - r0 for r0, r1 in ranges)
+    mean_rows = slice_rows_total / len(ranges)
+    f32 = mean_rows * LANE * 4
+    int8 = mean_rows * LANE * 1
+    scales = mean_rows / spec.block_rows * 4
+    return {"wire_bytes_f32": f32, "wire_bytes_int8": int8,
+            "wire_scale_bytes": scales,
+            "wire_ratio": int8 / f32 if f32 else 0.0}
 
 
 def kernel_vs_ref():
@@ -320,6 +342,9 @@ def _packed_resident_record():
     us_kernel = time_jax(f_kernel, w3, d3, ext3, iters=2, warmup=1)
 
     sc = _spmd_sweep_counts()
+    ranges = packed_row_ranges(spec, GossipConfig(
+        shifts=(1,), partial_blocks=p, partial_mode="leaves"))
+    wb = _wire_bytes(spec, ranges)
     emit(f"spmd/gossip_blend/packed_resident/W={wn}", us_res,
          f"per_round_us={us_round:.1f};"
          f"wall_speedup={us_round / us_res:.2f};"
@@ -327,23 +352,128 @@ def _packed_resident_record():
          f"kernel_bytes_with_packing={sc['kernel_bytes_with_packing']};"
          f"sweep_reduction="
          f"{sc['kernel_bytes_with_packing'] / sc['packed_resident_bytes']:.2f};"
+         f"wire_bytes={wb['wire_bytes_f32']:.0f};"
          f"pallas_interpret_us={us_kernel:.1f}")
     record("packed_resident", W=wn, p=p, n_per_worker=n_per_worker,
            state_mb=wn * n_per_worker * 4 / 2**20,
            per_round_ms=us_round / 1e3, resident_ms=us_res / 1e3,
            pallas_interpret_ms=us_kernel / 1e3,
            wall_speedup=us_round / us_res,
+           wire_bytes=wb["wire_bytes_f32"],
            sweep_reduction=(sc["kernel_bytes_with_packing"]
                             / sc["packed_resident_bytes"]), **sc)
+
+    # --- quantized_wire: the int8 wire format on the same scenario
+    # (ISSUE 4).  wire_bytes drop to 1/4 of the packed_resident record
+    # (payload; the f32 scale sidecar is 4/(block_rows*LANE) ≈ 0.01% and
+    # reported separately); the external's kernel reads drop to 0.25 units
+    # per pass (sweep units 9 -> 7.5).  Parity of the quantized GSPMD
+    # engine against the jnp fake-quant reference is asserted inline
+    # across partial_mode x delay (small arrays — the acceptance gate of
+    # BENCH_gossip_blend.json's quantized_wire record). ---
+    _quantized_wire_record(wn, p, spec, w3, d3, ext3, n_per_worker)
+
+
+def _quantized_parity_ok() -> bool:
+    """Engine-vs-fake-quant-reference parity across partial_mode x delay
+    on a small state; True iff states and gates agree everywhere.  The
+    side-by-side driver is run_quantized_parity — the SAME helper the
+    acceptance tests use (tests/test_gossip_wire.py), so benchmark and
+    test semantics cannot drift."""
+    import numpy as _np
+    acfg = ASGDConfig(eps=0.05)
+    ks = jax.random.split(jax.random.key(9), 3)
+    for mode in ("leaves", "rows"):
+        if mode == "leaves":
+            params = {"a": jax.random.normal(ks[0], (4, 16, 8)),
+                      "b": jax.random.normal(ks[1], (4, 6)),
+                      "c": jax.random.normal(ks[2], (4, 8, 4))}
+        else:   # 'rows' + int8 needs >= p * block_rows packed rows
+            params = {"w": jax.random.normal(ks[0], (4, 8, LANE))}
+        grads = jax.tree.map(lambda x: 0.05 * jnp.sign(x), params)
+        for delay in (0, 1):
+            cfg = GossipConfig(shifts=(1, 2), partial_blocks=2,
+                               partial_mode=mode, delay=delay,
+                               wire_format="int8")
+            spec = (pack_spec_w(params, block_rows=2,
+                                groups=leaf_groups(params, 2), n_groups=2)
+                    if mode == "leaves"
+                    else pack_spec_w(params, block_rows=2))
+            per_round, _ = run_quantized_parity(params, grads, cfg, acfg,
+                                                spec, rounds=3)
+            for r in per_round:
+                if not (_np.array_equal(_np.asarray(r["engine_gate"]),
+                                        _np.asarray(r["ref_gate"]))
+                        and _np.allclose(_np.asarray(r["engine_packed"]),
+                                         _np.asarray(r["ref_packed"]),
+                                         rtol=1e-6, atol=1e-6)):
+                    return False
+    return True
+
+
+def _quantized_wire_record(wn, p, spec, w3, d3, ext3, n_per_worker):
+    acfg = ASGDConfig(eps=0.05)
+    blk = jnp.int32(0)
+    rr = jnp.asarray(spec.group_row_ranges, jnp.int32)[blk]
+    q3, sc3 = quantize_rows(ext3, spec.block_rows)
+
+    # jnp stand-in of the quantized resident round (dequant fused into the
+    # batched blend dataflow — the CPU proxy of the kernel's fused dequant)
+    def resident_q(w3, d3, q3, sc3):
+        ext = dequantize_rows(q3, sc3, spec.block_rows)
+        rows = jnp.arange(spec.rows, dtype=jnp.int32)
+        m = jnp.broadcast_to(
+            ((rows >= rr[0]) & (rows < rr[1]))
+            .astype(jnp.float32)[:, None], (spec.rows, LANE)).reshape(-1)
+        out, _ = gossip_blend_w_batched(
+            w3.reshape(wn, -1), ext.reshape(wn, 1, -1),
+            d3.reshape(wn, -1), acfg.eps, mask=m)
+        return out.reshape(wn, spec.rows, LANE)
+
+    us_q = time_jax(jax.jit(resident_q), w3, d3, q3, sc3)
+
+    f_kernel = jax.jit(lambda w, d, q, s: gossip_blend_w_resident(
+        w, d, q[:, None], rr, acfg.eps, ext_scales=s[:, None],
+        block_rows=spec.block_rows)[0])
+    us_kernel = time_jax(f_kernel, w3, d3, q3, sc3, iters=2, warmup=1)
+
+    sc = _spmd_sweep_counts()
+    cfg = GossipConfig(shifts=(1,), partial_blocks=p, partial_mode="leaves")
+    wb = _wire_bytes(spec, packed_row_ranges(spec, cfg))
+    parity = _quantized_parity_ok()
+    if not parity:
+        # the acceptance gate must fail the harness loudly (benchmarks.run
+        # reports the exception and exits non-zero), not just write
+        # parity=false into the JSON artifact
+        raise RuntimeError(
+            "quantized_wire: int8 engine vs fake-quant reference parity "
+            "FAILED across partial_mode x delay")
+    emit(f"spmd/gossip_blend/quantized_wire/W={wn}", us_q,
+         f"wire_bytes_int8={wb['wire_bytes_int8']:.0f};"
+         f"wire_bytes_f32={wb['wire_bytes_f32']:.0f};"
+         f"wire_ratio={wb['wire_ratio']:.4f};"
+         f"wire_scale_bytes={wb['wire_scale_bytes']:.0f};"
+         f"quantized_wire_bytes={sc['quantized_wire_bytes']};"
+         f"packed_resident_bytes={sc['packed_resident_bytes']};"
+         f"parity={'ok' if parity else 'FAIL'};"
+         f"pallas_interpret_us={us_kernel:.1f}")
+    record("quantized_wire", W=wn, p=p, n_per_worker=n_per_worker,
+           state_mb=wn * n_per_worker * 4 / 2**20,
+           resident_q_ms=us_q / 1e3, pallas_interpret_ms=us_kernel / 1e3,
+           wire_bytes=wb["wire_bytes_int8"],
+           parity_partial_mode_x_delay=parity, **wb, **sc)
 
 
 def kernel_vs_ref_block_rows():
     """block_rows sweep of the resident kernel (ROADMAP 'autotune
-    block_rows' seed).  On CPU the Pallas timings measure the interpreter
-    (recorded for overhead tracking); the jnp stand-in is block_rows
-    independent, so the sweep's real payload is the per-block_rows kernel
-    records a TPU run can re-measure and compare.  Sweep values come from
-    ``--block-rows`` (benchmarks.run), default 32,64,128,256."""
+    block_rows' seed), in BOTH wire formats — f32 externals and the int8
+    fused-dequant variant (ISSUE 4), so the autotune seed covers the
+    quantized kernel too.  On CPU the Pallas timings measure the
+    interpreter (recorded for overhead tracking); the jnp stand-in is
+    block_rows independent, so the sweep's real payload is the
+    per-block_rows kernel records a TPU run can re-measure and compare.
+    Sweep values come from ``--block-rows`` (benchmarks.run), default
+    32,64,128,256."""
     wn = 4
     nw = 1 << 18    # 1 MiB f32 per worker: keeps the interpreter sweep fast
     rows_total = nw // LANE
@@ -362,12 +492,18 @@ def kernel_vs_ref_block_rows():
         f = jax.jit(lambda w, d, e, br=br: gossip_blend_w_resident(
             w, d, e, rr, acfg.eps, block_rows=br)[0])
         us = time_jax(f, w3, d3, e4, iters=1, warmup=1)
+        q4, s4 = quantize_rows(e4, br)
+        f_q = jax.jit(lambda w, d, q, s, br=br: gossip_blend_w_resident(
+            w, d, q, rr, acfg.eps, ext_scales=s, block_rows=br)[0])
+        us_q = time_jax(f_q, w3, d3, q4, s4, iters=1, warmup=1)
         emit(f"spmd/gossip_blend/block_rows/{br}", us,
              f"W={wn};rows={rows_total};grid={rows_total // br};"
-             f"pallas_interpret=1")
-        record("block_rows_sweep", block_rows=br, W=wn, rows=rows_total,
-               n_per_worker=nw, pallas_interpret_ms=us / 1e3,
-               grid_blocks=rows_total // br)
+             f"int8_us={us_q:.1f};pallas_interpret=1")
+        for wire, t in (("f32", us), ("int8", us_q)):
+            record("block_rows_sweep", block_rows=br, W=wn,
+                   rows=rows_total, n_per_worker=nw, wire_format=wire,
+                   pallas_interpret_ms=t / 1e3,
+                   grid_blocks=rows_total // br)
 
 
 ALL = [spmd_step_cost, gossip_overhead_pct, kernel_vs_ref,

@@ -77,14 +77,20 @@ def load_checkpoint(path, like):
 def _packed_state_to_tree(state, spec):
     """Canonical-layout view of a packed-resident train state: params and
     the gossip staleness buffer become pytrees (param dtypes restored);
-    everything else passes through."""
+    everything else passes through.  An int8-wire buffer
+    (PackedGossipState.buf_scales is not None) is DEQUANTIZED first — the
+    canonical checkpoint stores float values and the quantization scales
+    are transient, never written to disk."""
     from ..core.gossip import GossipState
-    from ..core.packing import unpack_w
+    from ..core.packing import dequantize_rows, unpack_w
 
     out = dict(state)
     out["params"] = unpack_w(state["params"], spec)
     g = state["gossip"]
-    out["gossip"] = GossipState(buf=unpack_w(g.buf, spec),
+    buf = g.buf
+    if g.buf_scales is not None:
+        buf = dequantize_rows(buf, g.buf_scales, spec.block_rows)
+    out["gossip"] = GossipState(buf=unpack_w(buf, spec),
                                 buf_idx=g.buf_idx, step=g.step)
     return out
 
@@ -105,14 +111,25 @@ def save_checkpoint_packed(path, state, spec) -> None:
 def load_checkpoint_packed(path, like_state, spec):
     """Inverse of :func:`save_checkpoint_packed`: restore a canonical
     checkpoint into the packed-resident layout (re-packs params and the
-    staleness buffer with ``spec``)."""
+    staleness buffer with ``spec``).  If ``like_state`` carries an
+    int8-wire gossip buffer (buf_scales is not None) the restored float
+    buffer is RE-quantized — the scales are reconstructed from the values
+    (bit-exact for buffers that made the wire round-trip: the absmax
+    element quantized to ±127, so the recovered scale is the original)."""
     from ..core.gossip import PackedGossipState
-    from ..core.packing import pack_w
+    from ..core.packing import pack_w, quantize_rows
 
     tree = load_checkpoint(path, _packed_state_to_tree(like_state, spec))
     out = dict(tree)
     out["params"] = pack_w(tree["params"], spec)
     g = tree["gossip"]
-    out["gossip"] = PackedGossipState(buf=pack_w(g.buf, spec),
-                                      buf_idx=g.buf_idx, step=g.step)
+    buf = pack_w(g.buf, spec)
+    like_g = like_state["gossip"]
+    if getattr(like_g, "buf_scales", None) is not None:
+        q, scales = quantize_rows(buf, spec.block_rows)
+        out["gossip"] = PackedGossipState(buf=q, buf_scales=scales,
+                                          buf_idx=g.buf_idx, step=g.step)
+    else:
+        out["gossip"] = PackedGossipState(buf=buf, buf_idx=g.buf_idx,
+                                          step=g.step)
     return out

@@ -75,14 +75,28 @@ class GossipConfig:
     delay: staleness in rounds. delay=1 blends states received last round
       (faithful: a receiver only ever sees a past sender state);
       delay=0 blends immediately (synchronous gossip, beyond-paper ablation).
-    payload_dtype: wire dtype of the exchanged block. Params' own dtype by
-      default; int8 quantized gossip is a beyond-paper §Perf variant.
+    wire_format: what travels on the wire (DESIGN.md §6 wire formats):
+      * None     — the carrier dtype, no transformation (default; if
+                   payload_dtype is set it resolves to "dtype" for
+                   backward compatibility);
+      * "dtype"  — cast to payload_dtype for the collective, cast back on
+                   receipt (a fake-quant round-trip: the staleness buffer
+                   always stores carrier-dtype values);
+      * "int8"   — int8 quantization with per-block_rows f32 scales
+                   (core/packing.py quantize_rows).  On the packed-resident
+                   engine this is a REAL wire format: the collective moves
+                   int8 payload + tiny scales, the staleness buffer stays
+                   quantized, and the resident kernel dequantizes
+                   in-register.  On the pytree engines it is the
+                   per-worker-per-leaf fake-quant stand-in.
+    payload_dtype: wire dtype for wire_format="dtype".
     """
 
     shifts: tuple = (1, 2, 4, 8)
     partial_blocks: int = 4
     partial_mode: str = "leaves"
     delay: int = 1
+    wire_format: Any = None
     payload_dtype: Any = None
     # communication interval: gossip every k-th step (paper's frequency
     # 1/b generalized — on TPU the mini-batch is the step, so the interval
@@ -96,6 +110,71 @@ class GossipConfig:
     # (single-shard states: the in-jit GSPMD path and all tests).
     fused_block_rows: int = 64
     gate_psum_axes: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# wire format: the ONE place the exchanged block's on-wire representation is
+# decided (unifies the historical _roll_group / _apply_rows /
+# _roll_packed_rows / mesh-region cast sites, which disagreed on whether the
+# staleness buffer stored wire-dtype or carrier-dtype values)
+# ---------------------------------------------------------------------------
+
+def resolved_wire_format(cfg: GossipConfig):
+    """Resolve GossipConfig.wire_format to None | "dtype" | "int8".
+
+    wire_format=None with payload_dtype set keeps the pre-wire_format
+    behaviour (a payload_dtype cast) as "dtype"."""
+    wf = cfg.wire_format
+    if wf is None:
+        return "dtype" if cfg.payload_dtype is not None else None
+    if wf == "dtype":
+        if cfg.payload_dtype is None:
+            raise ValueError(
+                'wire_format="dtype" requires payload_dtype')
+        return "dtype"
+    if wf == "int8":
+        if cfg.payload_dtype is not None:
+            raise ValueError(
+                'wire_format="int8" ignores payload_dtype — remove '
+                "payload_dtype or use wire_format=\"dtype\"")
+        return "int8"
+    raise ValueError(f"unknown wire_format {wf!r} "
+                     '(expected None, "dtype" or "int8")')
+
+
+def _fake_quant_leaf(x):
+    """Per-worker int8 fake-quant round-trip of one (W, ...) leaf — the
+    pytree-engine stand-in for the packed int8 wire (one absmax scale per
+    worker row per leaf; zeros stay exactly zero, eq. 3)."""
+    x32 = x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim))
+    absmax = jnp.max(jnp.abs(x32), axis=axes, keepdims=True)
+    scale = absmax / 127.0
+    inv = jnp.where(scale > 0.0,
+                    1.0 / jnp.where(scale > 0.0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(x32 * inv), -127.0, 127.0)
+    return (q * scale).astype(x.dtype)
+
+
+def wire_roundtrip(tree, cfg: GossipConfig):
+    """Apply the wire round-trip to every leaf of a (sub)tree or array.
+
+    The sender-side transformation of the exchanged block, as VALUES: the
+    receiver always stores carrier-dtype numbers that have made the wire
+    round-trip ("dtype": cast down and back; "int8": fake-quant; None:
+    identity).  Commutes with the worker roll (both are elementwise /
+    worker-permutation maps), so GSPMD stand-ins may apply it on either
+    side of the collective.  The packed-resident engine does NOT use this
+    for "int8" — there the wire is genuinely quantized
+    (exchange_packed / quantize_rows) and dequantization happens inside
+    the kernel."""
+    wf = resolved_wire_format(cfg)
+    if wf is None:
+        return tree
+    if wf == "dtype":
+        return jax.tree.map(
+            lambda x: x.astype(cfg.payload_dtype).astype(x.dtype), tree)
+    return jax.tree.map(_fake_quant_leaf, tree)
 
 
 # ---------------------------------------------------------------------------
@@ -118,20 +197,18 @@ def leaf_groups(params, p: int):
     return jax.tree.unflatten(treedef, gid)
 
 
-def _roll_group(params, groups, g: int, shift: int, payload_dtype=None):
+def _roll_group(params, groups, g: int, shift: int, cfg: GossipConfig):
     """Branch body: roll group-``g`` leaves by ``shift`` along the worker
     axis (-> collective-permute); other leaves are local zeros (no comms).
 
-    The wire cast to ``payload_dtype`` happens HERE, on the rolled group's
-    leaves only — casting the whole tree up front would cost a full-state
-    sweep per round for leaves that are never sent."""
+    The wire round-trip (wire_roundtrip) happens HERE, on the rolled
+    group's leaves only — transforming the whole tree up front would cost a
+    full-state sweep per round for leaves that are never sent.  The buffer
+    stores carrier-dtype values either way."""
     def f(x, gi):
         if gi != g:
-            return jnp.zeros_like(
-                x, dtype=payload_dtype if payload_dtype is not None
-                else x.dtype)
-        y = x if payload_dtype is None else x.astype(payload_dtype)
-        return jnp.roll(y, shift, axis=0)
+            return jnp.zeros_like(x)
+        return jnp.roll(wire_roundtrip(x, cfg), shift, axis=0)
     return jax.tree.map(f, params, groups)
 
 
@@ -142,8 +219,7 @@ def exchange_leaves(params, groups, shift_idx, block_idx, cfg: GossipConfig):
     for s in cfg.shifts:
         for g in range(cfg.partial_blocks):
             branches.append(
-                lambda t, s=s, g=g: _roll_group(
-                    t, groups, g, s, cfg.payload_dtype))
+                lambda t, s=s, g=g: _roll_group(t, groups, g, s, cfg))
     idx = shift_idx * cfg.partial_blocks + block_idx
     return jax.lax.switch(idx, branches, params)
 
@@ -299,15 +375,21 @@ class GossipState:
 
 
 def init_gossip_state(params, cfg: GossipConfig) -> GossipState:
-    """Zero staleness buffer (paper eq. 3: all-zero == 'no message yet')."""
-    dt = cfg.payload_dtype
+    """Zero staleness buffer in the CARRIER dtype.
+
+    Paper eq. 3 reads an all-zero buffer as 'no message yet' — but the
+    engines no longer rely on the gate's zero-detection for correctness on
+    round 1: the explicit ``step == 0`` staleness guard
+    (_apply_leaves/_apply_rows/asgd_gossip_apply_packed) closes every gate
+    on the first delayed round regardless of the buffer's content.  The
+    buffer stores carrier-dtype values post wire round-trip in every mode
+    (wire_roundtrip), so delayed-buffer dtypes no longer differ between
+    'leaves'/'rows'/packed engines."""
     if cfg.partial_mode == "rows":
         blk = slice_rows(params, jnp.int32(0), cfg.partial_blocks)
-        buf = jax.tree.map(
-            lambda x: jnp.zeros_like(x, dtype=dt or x.dtype), blk)
+        buf = jax.tree.map(jnp.zeros_like, blk)
     else:
-        buf = jax.tree.map(
-            lambda x: jnp.zeros_like(x, dtype=dt or x.dtype), params)
+        buf = jax.tree.map(jnp.zeros_like, params)
     return GossipState(buf=buf, buf_idx=jnp.int32(0), step=jnp.int32(0))
 
 
@@ -385,7 +467,24 @@ def asgd_gossip_apply(params, grads, state: GossipState, key,
         gossip_branch, silent_branch, (params, grads, state))
 
 
-def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None):
+def staleness_valid(step, cfg: GossipConfig):
+    """Round-1 staleness guard: with delay > 0 the buffer blended on the
+    FIRST round (step == 0) is the zero-initialized init_gossip_state
+    placeholder, not a received block — gate it out explicitly (f32 0/1
+    multiplier on the admission gates) instead of relying on the Parzen
+    gate's eq.-3 zero-detection, which conflates 'no message yet' with a
+    legitimately all-zero (or garbage-restored) state.  Returns None when
+    every external is valid (delay == 0: the just-received block is always
+    real).  The single source of the guard condition — shared by the
+    pytree engines, the packed GSPMD engine, and the shard_map
+    manual-region round (launch/mesh.py)."""
+    if cfg.delay == 0:
+        return None
+    return (step > 0).astype(jnp.float32)
+
+
+def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None,
+                 gate_scale=None):
     """Gate + blend through the worker-batched Pallas kernel (both modes).
 
     Pack-once dataflow (core/packing.py): the state trees are each
@@ -414,7 +513,8 @@ def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None):
         pack_w(ext, spec)[:, None],          # (W_local, P=1, R, LANE)
         acfg.eps, mask2d=mask2, use_parzen=acfg.use_parzen,
         elastic=acfg.elastic, elastic_alpha=acfg.elastic_alpha,
-        block_rows=spec.block_rows, psum_axes=cfg.gate_psum_axes or None)
+        block_rows=spec.block_rows, psum_axes=cfg.gate_psum_axes or None,
+        gate_scale=gate_scale)
     return unpack_w(out3, spec), gates[:, 0]
 
 
@@ -423,16 +523,20 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
     sent = exchange_leaves(params, groups, shift_idx, block_idx, cfg)
 
     if cfg.delay == 0:
-        ext, ext_idx = sent, block_idx
+        ext, ext_idx, valid = sent, block_idx, None
     else:
         ext, ext_idx = state.buf, state.buf_idx
+        valid = staleness_valid(state.step, cfg)
 
     if acfg.use_fused:
         new_params, gate = _fused_blend(
-            params, grads, ext, cfg, acfg, groups, ext_idx)
+            params, grads, ext, cfg, acfg, groups, ext_idx,
+            gate_scale=valid)
     else:
         # Parzen gate (eq. 4) restricted to the buffered partition's leaves
         gate = _gossip_gate(params, grads, ext, acfg, groups, ext_idx)
+        if valid is not None:
+            gate = gate * valid
 
         def upd(w, g, e, gi):
             in_group = (gi == ext_idx)  # traced bool scalar, static group id
@@ -450,22 +554,26 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
 def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
     p = cfg.partial_blocks
     my_block = slice_rows(params, block_idx, p)
-    sent = exchange_rows(my_block, shift_idx, cfg)
-    if cfg.payload_dtype is not None:
-        sent = jax.tree.map(
-            lambda x: x.astype(cfg.payload_dtype), sent)
+    # sender-side wire round-trip BEFORE the roll — same site semantics as
+    # 'leaves' mode (_roll_group), so the staleness buffer stores
+    # carrier-dtype round-tripped values in both modes
+    sent = exchange_rows(wire_roundtrip(my_block, cfg), shift_idx, cfg)
 
     if cfg.delay == 0:
-        ext, ext_idx = sent, block_idx
+        ext, ext_idx, valid = sent, block_idx, None
     else:
         ext, ext_idx = state.buf, state.buf_idx
+        valid = staleness_valid(state.step, cfg)
 
     local_blk = slice_rows(params, ext_idx, p)
     grads_blk = slice_rows(grads, ext_idx, p)
     if acfg.use_fused:
-        blended, gate = _fused_blend(local_blk, grads_blk, ext, cfg, acfg)
+        blended, gate = _fused_blend(local_blk, grads_blk, ext, cfg, acfg,
+                                     gate_scale=valid)
     else:
         gate = _gossip_gate(local_blk, grads_blk, ext, acfg)
+        if valid is not None:
+            gate = gate * valid
         blended = jax.tree.map(
             lambda w, e, g: _blend(w, e, g, gate, acfg),
             local_blk, ext, grads_blk)
@@ -488,9 +596,16 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
 class PackedGossipState:
     """Carried between packed-resident rounds.
 
-    buf: staleness buffer as packed rows — the (W, R, LANE) f32 array
-      received last round, zeros outside the exchanged partition's row
-      range (the packed analogue of GossipState.buf in 'leaves' mode).
+    buf: staleness buffer as packed rows — the (W, R, LANE) array received
+      last round, zeros outside the exchanged partition's row range (the
+      packed analogue of GossipState.buf in 'leaves' mode).  Carrier f32
+      normally; int8 under wire_format="int8" (the received block stays
+      QUANTIZED until the kernel dequantizes it in-register — it never
+      materializes in float in HBM).
+    buf_scales: per-block_rows f32 dequantization scales
+      (W, R // block_rows) matching buf when wire_format="int8"; None
+      otherwise.  Transient — never checkpointed (checkpoint/ canonicalizes
+      buf to the dequantized pytree layout).
     buf_idx: which partition index buf holds.
     step: round counter.
     """
@@ -498,18 +613,36 @@ class PackedGossipState:
     buf: Any
     buf_idx: jnp.ndarray
     step: jnp.ndarray
+    buf_scales: Any = None
 
     def tree_flatten(self):
-        return (self.buf, self.buf_idx, self.step), None
+        return (self.buf, self.buf_idx, self.step, self.buf_scales), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
 
-def init_packed_gossip_state(packed) -> PackedGossipState:
+def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
+                             block_rows: int | None = None
+                             ) -> PackedGossipState:
     """Zero packed staleness buffer (paper eq. 3: all-zero == 'no message
-    yet' — exact on packed rows: padding is zero too)."""
+    yet' — exact on packed rows: padding is zero too; round 1 is
+    additionally gated by the explicit step == 0 staleness guard in
+    asgd_gossip_apply_packed).  With cfg resolving to wire_format="int8"
+    (pass the spec's block_rows too) the buffer is int8 zeros plus zero
+    scales — the quantized form of 'no message'."""
+    if cfg is not None and resolved_wire_format(cfg) == "int8":
+        if block_rows is None:
+            raise ValueError(
+                'init_packed_gossip_state: wire_format="int8" needs '
+                "block_rows (spec.block_rows)")
+        from .packing import scale_blocks
+        nb = scale_blocks(packed.shape[1], block_rows)
+        return PackedGossipState(
+            buf=jnp.zeros(packed.shape, jnp.int8),
+            buf_scales=jnp.zeros((packed.shape[0], nb), jnp.float32),
+            buf_idx=jnp.int32(0), step=jnp.int32(0))
     return PackedGossipState(buf=jnp.zeros_like(packed),
                              buf_idx=jnp.int32(0), step=jnp.int32(0))
 
@@ -522,6 +655,14 @@ def packed_row_ranges(spec, cfg: GossipConfig) -> tuple:
     partitions the packed rows themselves into p contiguous chunks — the
     packed-space analogue of slicing "along the individual cluster centers"
     (any contiguous 1/p of the flat state is a valid paper §4.4 partition).
+
+    Under wire_format="int8" ONLY, 'rows'-mode chunks are rounded up to a
+    block_rows multiple so the per-block_rows quantization scales never
+    straddle a partition boundary (the float kernel's row mask handles
+    unaligned ranges fine, so other formats keep the exact 1/p split).
+    A config whose alignment would leave empty partitions — rows <
+    p * block_rows, i.e. 1/p of a round's exchanges silently shipping the
+    whole state and the rest nothing — raises instead.
     """
     p = cfg.partial_blocks
     if cfg.partial_mode == "leaves":
@@ -534,36 +675,90 @@ def packed_row_ranges(spec, cfg: GossipConfig) -> tuple:
                 f"spec has {len(spec.group_row_ranges)} group ranges, "
                 f"cfg.partial_blocks={p}")
         return spec.group_row_ranges
+    if resolved_wire_format(cfg) == "int8":
+        br = spec.block_rows
+        if spec.rows < p * br:
+            raise ValueError(
+                f"wire_format='int8' 'rows' partitioning is unsatisfiable: "
+                f"rows={spec.rows} < partial_blocks={p} * block_rows={br} "
+                f"cannot give every partition a non-empty block-aligned "
+                f"range — lower block_rows (pack_spec_w) or partial_blocks")
+
+        def bound(g):  # proportional boundary, snapped to block_rows
+            return min(int(round(g * spec.rows / p / br)) * br, spec.rows)
+
+        # rows >= p*br guarantees every rounded range is non-empty
+        return tuple((bound(g), bound(g + 1)) for g in range(p))
     chunk = -(-spec.rows // p)
     return tuple((min(g * chunk, spec.rows), min((g + 1) * chunk, spec.rows))
                  for g in range(p))
 
 
-def _roll_packed_rows(packed, r0: int, r1: int, shift: int, payload_dtype):
+def _roll_packed_rows(packed, r0: int, r1: int, shift: int,
+                      cfg: GossipConfig):
     """Branch body: roll rows [r0, r1) of the packed ensemble by ``shift``
     along the worker axis (-> ONE collective-permute of |w|/p bytes); all
-    other rows are local zeros — they were never sent."""
-    blk = packed[:, r0:r1]
-    if payload_dtype is not None:
-        # wire quantization round-trip: the receiver stores packed f32
-        blk = blk.astype(payload_dtype).astype(packed.dtype)
+    other rows are local zeros — they were never sent.  The wire round-trip
+    (wire_roundtrip — None or "dtype" formats; "int8" takes the genuinely
+    quantized _roll_packed_rows_q path) applies to the sliced block only."""
+    blk = wire_roundtrip(packed[:, r0:r1], cfg)
     rolled = jnp.roll(blk, shift, axis=0)
     return jnp.zeros_like(packed).at[:, r0:r1].set(rolled)
 
 
-def exchange_packed(packed, ranges, shift_idx, block_idx, cfg: GossipConfig):
+def quantized_exchange_body(packed, r0: int, r1: int, block_rows: int,
+                            roll):
+    """int8-wire branch body, shared by the GSPMD roll and the
+    manual-region ppermute (launch/mesh.py): quantize rows [r0, r1), roll
+    the int8 payload and its per-block_rows scales along the worker axis
+    with ``roll`` (wire bytes (r1-r0)·LANE·1 + 4·(r1-r0)/block_rows ≈
+    |w|/(4p)), scatter both into full-size zero buffers.  Returns
+    (q (W, R, LANE) int8, scales (W, R // block_rows) f32) — the quantized
+    staleness buffer.  One body for both transports so the scale tiling /
+    scatter indexing can never drift between them."""
+    from .packing import quantize_rows, scale_blocks
+    wn, rows = packed.shape[0], packed.shape[1]
+    nb = scale_blocks(rows, block_rows)
+    q, s = quantize_rows(packed[:, r0:r1], block_rows)
+    q, s = roll(q), roll(s)
+    full_q = jnp.zeros(packed.shape, jnp.int8).at[:, r0:r1].set(q)
+    full_s = jnp.zeros((wn, nb), jnp.float32) \
+        .at[:, r0 // block_rows:r1 // block_rows].set(s)
+    return full_q, full_s
+
+
+def _roll_packed_rows_q(packed, r0: int, r1: int, shift: int,
+                        block_rows: int):
+    return quantized_exchange_body(
+        packed, r0, r1, block_rows, lambda x: jnp.roll(x, shift, axis=0))
+
+
+def exchange_packed(packed, ranges, shift_idx, block_idx, cfg: GossipConfig,
+                    block_rows: int | None = None):
     """lax.switch over (shift, partition) static pairs on packed rows.
 
     Every branch slices a STATIC row range (the partition index is static
     inside its branch), so the exchange moves exactly (r1-r0)·LANE·4 ≈
-    |w|/p bytes and never re-lays-out the resident ensemble."""
+    |w|/p bytes — or |w|/(4p) + scales under wire_format="int8", where the
+    return value is the (q, scales) pair instead of a float block (pass the
+    spec's block_rows) — and never re-lays-out the resident ensemble."""
+    wire = resolved_wire_format(cfg)
+    if wire == "int8" and block_rows is None:
+        raise ValueError(
+            'exchange_packed: wire_format="int8" needs block_rows '
+            "(spec.block_rows)")
     branches = []
     for s in cfg.shifts:
         for g in range(cfg.partial_blocks):
             r0, r1 = ranges[g]
-            branches.append(
-                lambda t, s=s, r0=r0, r1=r1: _roll_packed_rows(
-                    t, r0, r1, s, cfg.payload_dtype))
+            if wire == "int8":
+                branches.append(
+                    lambda t, s=s, r0=r0, r1=r1: _roll_packed_rows_q(
+                        t, r0, r1, s, block_rows))
+            else:
+                branches.append(
+                    lambda t, s=s, r0=r0, r1=r1: _roll_packed_rows(
+                        t, r0, r1, s, cfg))
     idx = shift_idx * cfg.partial_blocks + block_idx
     return jax.lax.switch(idx, branches, packed)
 
@@ -581,6 +776,13 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
     accounting: 2 kernel passes reading w+dw+ext (7 byte units) vs 18 for
     the per-round pack/unpack wiring (EXPERIMENTS.md §Perf).
 
+    With wire_format="int8" the exchanged slice travels (and is buffered)
+    as int8 + per-block_rows f32 scales; both kernel passes dequantize
+    in-register, so the external never exists in float in HBM and the
+    collective moves |w|/(4p) bytes.  Round 1 with delay > 0 is closed by
+    the explicit step == 0 staleness guard (the init buffer is a
+    placeholder, not a received block).
+
     Args:
       packed: (W, R, LANE) f32 resident ensemble.
       pgrads: (W, R, LANE) packed local steps Delta_M (pack_w of grads —
@@ -595,11 +797,13 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
     """
     W = packed.shape[0]
     if acfg.silent:
-        state = PackedGossipState(state.buf, state.buf_idx, state.step + 1)
+        state = PackedGossipState(buf=state.buf, buf_scales=state.buf_scales,
+                                  buf_idx=state.buf_idx, step=state.step + 1)
         return packed - acfg.eps * pgrads, state, {
             "gate": jnp.zeros((W,), jnp.float32), "n_good": jnp.float32(0.0)}
 
     p = cfg.partial_blocks
+    wire = resolved_wire_format(cfg)
     k_shift, k_blk = jax.random.split(key)
     shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
     block_idx = jax.random.randint(k_blk, (), 0, p)
@@ -609,19 +813,31 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
         packed, pgrads, state = args
         from ..kernels.gossip_blend import gossip_blend_w_resident
 
-        sent = exchange_packed(packed, ranges, shift_idx, block_idx, cfg)
-        if cfg.delay == 0:
-            ext, ext_idx = sent, block_idx
+        if wire == "int8":
+            sent, sent_scales = exchange_packed(
+                packed, ranges, shift_idx, block_idx, cfg,
+                block_rows=spec.block_rows)
         else:
-            ext, ext_idx = state.buf, state.buf_idx
+            sent = exchange_packed(packed, ranges, shift_idx, block_idx,
+                                   cfg)
+            sent_scales = None
+        if cfg.delay == 0:
+            ext, ext_scales, ext_idx = sent, sent_scales, block_idx
+            valid = None
+        else:
+            ext, ext_scales = state.buf, state.buf_scales
+            ext_idx = state.buf_idx
+            valid = staleness_valid(state.step, cfg)
         row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
         new_packed, gates = gossip_blend_w_resident(
             packed, pgrads, ext[:, None], row_range, acfg.eps,
+            ext_scales=None if ext_scales is None else ext_scales[:, None],
             use_parzen=acfg.use_parzen, elastic=acfg.elastic,
             elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-            psum_axes=cfg.gate_psum_axes or None)
+            psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
         gate = gates[:, 0]
-        new_state = PackedGossipState(buf=sent, buf_idx=block_idx,
+        new_state = PackedGossipState(buf=sent, buf_scales=sent_scales,
+                                      buf_idx=block_idx,
                                       step=state.step + 1)
         return new_packed, new_state, {"gate": gate,
                                        "n_good": jnp.sum(gate)}
@@ -631,8 +847,10 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
 
     def silent_branch(args):
         packed, pgrads, state = args
-        new_state = PackedGossipState(state.buf, state.buf_idx,
-                                      state.step + 1)
+        new_state = PackedGossipState(buf=state.buf,
+                                      buf_scales=state.buf_scales,
+                                      buf_idx=state.buf_idx,
+                                      step=state.step + 1)
         zero = jnp.zeros((W,), jnp.float32)
         return packed - acfg.eps * pgrads, new_state, {
             "gate": zero, "n_good": jnp.float32(0.0)}

@@ -240,6 +240,74 @@ def unpack_w(arr3d, spec: WPackSpec):
     return jax.tree.unflatten(spec.treedef, out)
 
 
+# ---------------------------------------------------------------------------
+# int8 wire quantization (GossipConfig.wire_format="int8", DESIGN.md §6):
+# the exchanged packed row slice is quantized to int8 with one f32 scale per
+# block_rows row tile, shipped through the same collective, and dequantized
+# IN-REGISTER inside the resident kernel passes (kernels/gossip_blend) — the
+# external never materializes in float in HBM.
+# ---------------------------------------------------------------------------
+
+def scale_blocks(rows: int, block_rows: int) -> int:
+    """Number of per-``block_rows`` quantization scales covering ``rows``."""
+    if rows % block_rows:
+        raise ValueError(
+            f"quantize_rows: rows={rows} not a multiple of "
+            f"block_rows={block_rows}")
+    return rows // block_rows
+
+
+def quantize_rows(blk, block_rows: int):
+    """int8-quantize packed rows with per-``block_rows`` f32 absmax scales.
+
+    blk: ``(..., rows, LANE)`` float; rows must divide by block_rows (group
+    row ranges and the packed row count are block-aligned by construction —
+    core.gossip.packed_row_ranges).  Returns ``(q, scales)`` with ``q`` int8
+    of blk's shape and ``scales`` f32 ``(..., rows // block_rows)``:
+
+        scale = absmax(tile) / 127        q = round(x / scale) in [-127, 127]
+
+    An all-zero tile gets scale 0 and quantizes to exact zeros, so the
+    paper's eq.-3 'all-zero == no message' invariant survives the wire
+    bit-exactly.  The quantization tile equals one kernel row block, so the
+    resident kernel dequantizes each grid block with a single scalar.
+    """
+    lead = blk.shape[:-2]
+    rows, lane = blk.shape[-2:]
+    nb = scale_blocks(rows, block_rows)
+    t = blk.astype(jnp.float32).reshape(lead + (nb, block_rows * lane))
+    absmax = jnp.max(jnp.abs(t), axis=-1)
+    scales = absmax / 127.0
+    inv = jnp.where(scales > 0.0,
+                    1.0 / jnp.where(scales > 0.0, scales, 1.0), 0.0)
+    q = jnp.clip(jnp.round(t * inv[..., None]), -127.0, 127.0)
+    return q.astype(jnp.int8).reshape(blk.shape), scales
+
+
+def dequantize_rows(q, scales, block_rows: int):
+    """Inverse of :func:`quantize_rows`: ``q * scale`` per row tile, f32.
+
+    This is the BIT-IDENTICAL jnp form of the in-kernel dequantization
+    (``ext.astype(f32) * scale`` — one f32 multiply per element), so the
+    fake-quant reference path and the fused kernel agree exactly.
+    """
+    lead = q.shape[:-2]
+    rows, lane = q.shape[-2:]
+    nb = scale_blocks(rows, block_rows)
+    t = q.astype(jnp.float32).reshape(lead + (nb, block_rows * lane))
+    return (t * scales[..., None]).reshape(q.shape)
+
+
+def fake_quant_rows(blk, block_rows: int):
+    """The wire round-trip as a value map: dequantize(quantize(blk)).
+
+    The jnp reference implementation of what the int8 wire does to the
+    exchanged values (tests and the ``use_fused=False``-style fake-quant
+    parity path)."""
+    q, scales = quantize_rows(blk, block_rows)
+    return dequantize_rows(q, scales, block_rows)
+
+
 def group_ranges_array(spec: WPackSpec):
     """The static ``group_row_ranges`` table as a (p, 2) int32 device array —
     indexed with the traced partition id to produce the (2,) row-range the

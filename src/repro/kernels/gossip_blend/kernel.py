@@ -47,6 +47,14 @@ enters through scalar prefetch (``pltpu.PrefetchScalarGridSpec``) and the
 mask is an in-register iota compare — the ``(R, LANE)`` mask array and its
 HBM read per pass disappear: pass 1 reads exactly w+dw+ext, pass 2 reads
 the same and writes w_next (EXPERIMENTS.md §Perf byte table).
+
+int8 wire payloads (``GossipConfig.wire_format="int8"``, DESIGN.md §6):
+the resident variants optionally take the external as int8 plus
+per-``block_rows`` f32 scales (``ext_scales``, one scalar per external per
+grid block — the quantization tile equals the kernel row block by
+construction).  Dequantization (``q.astype(f32) * scale``) is fused into
+BOTH passes in-register, so the received block never materializes in
+float in HBM and the ext read costs 1/4 of the f32 bytes.
 """
 from __future__ import annotations
 
@@ -289,8 +297,11 @@ def _row_range_mask(rr_ref, block_idx, block_rows):
     return ((rows >= rr_ref[0]) & (rows < rr_ref[1])).astype(jnp.float32)
 
 
-def _reduce_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, acc_ref, *,
-                              block_rows):
+def _reduce_w_resident_kernel(*refs, block_rows, has_scales):
+    if has_scales:
+        rr_ref, w_ref, dw_ref, ext_ref, scales_ref, acc_ref = refs
+    else:
+        rr_ref, w_ref, dw_ref, ext_ref, acc_ref = refs
     i = pl.program_id(1)        # row-block index (innermost grid dim)
 
     @pl.when(i == 0)
@@ -300,7 +311,13 @@ def _reduce_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, acc_ref, *,
     m = _row_range_mask(rr_ref, i, block_rows)
     w = w_ref[...][0].astype(jnp.float32)            # (br, LANE)
     dw = dw_ref[...][0].astype(jnp.float32) * m
-    ext = ext_ref[...][0].astype(jnp.float32) * m[None]   # (P, br, LANE)
+    ext = ext_ref[...][0].astype(jnp.float32)        # (P, br, LANE)
+    if has_scales:
+        # fused int8-wire dequantization: one f32 scale per external per
+        # row block (the quantization tile == the kernel grid block), so
+        # the external never materializes in float in HBM
+        ext = ext * scales_ref[...][0, :, 0][:, None, None]
+    ext = ext * m[None]
     dot = jnp.sum(dw[None] * (w[None] - ext), axis=(1, 2))   # (P,)
     sq_ext = jnp.sum(ext * ext, axis=(1, 2))                 # (P,)
     sq_dw = jnp.sum(dw * dw)                                 # shared scalar
@@ -309,14 +326,20 @@ def _reduce_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, acc_ref, *,
     acc_ref[0, :, 2] += sq_dw   # replicated across P rows (read row 0)
 
 
-def _apply_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, gates_ref,
-                             inv_ref, out_ref, *, eps, elastic,
-                             elastic_alpha, block_rows):
+def _apply_w_resident_kernel(*refs, eps, elastic, elastic_alpha, block_rows,
+                             has_scales):
+    if has_scales:
+        (rr_ref, w_ref, dw_ref, ext_ref, scales_ref, gates_ref, inv_ref,
+         out_ref) = refs
+    else:
+        rr_ref, w_ref, dw_ref, ext_ref, gates_ref, inv_ref, out_ref = refs
     i = pl.program_id(1)
     m = _row_range_mask(rr_ref, i, block_rows)
     w = w_ref[...][0].astype(jnp.float32)            # (br, LANE)
     dw = dw_ref[...][0].astype(jnp.float32)
     ext = ext_ref[...][0].astype(jnp.float32)        # (P, br, LANE)
+    if has_scales:
+        ext = ext * scales_ref[...][0, :, 0][:, None, None]
     g = gates_ref[...][0]                            # (P,)
     inv_denom = inv_ref[...][0, 0]
     mean = inv_denom * (w + jnp.sum(g[:, None, None] * ext, axis=0))
@@ -331,11 +354,14 @@ def _apply_w_resident_kernel(rr_ref, w_ref, dw_ref, ext_ref, gates_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d, *,
-                                    block_rows=64, interpret=None):
+def gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d,
+                                    ext_scales=None, *, block_rows=64,
+                                    interpret=None):
     """Packed-resident pass 1.  row_range: (2,) int32 [row_start, row_end)
     of the exchanged partition (scalar prefetch); w3d/dw3d: (W, R, LANE);
-    ext4d: (W, P, R, LANE).
+    ext4d: (W, P, R, LANE) — float, or int8 when ext_scales
+    (W, P, R // block_rows) f32 is given: dequantization is then fused
+    into the pass (in-register q * scale per grid block).
 
     Returns (W, P, 3) f32 accumulators as gossip_reduce_w_pallas, with
     every term restricted to the row range — no mask operand, no mask HBM
@@ -343,55 +369,70 @@ def gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d, *,
     """
     wn, r = w3d.shape[:2]
     p = ext4d.shape[1]
+    in_specs = [
+        pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
+        pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
+        pl.BlockSpec((1, p, block_rows, LANE),
+                     lambda wi, i, rr: (wi, 0, i, 0)),
+    ]
+    operands = [w3d, dw3d, ext4d]
+    if ext_scales is not None:
+        in_specs.append(pl.BlockSpec((1, p, 1), lambda wi, i, rr: (wi, 0, i)))
+        operands.append(ext_scales.astype(jnp.float32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(wn, r // block_rows),
-        in_specs=[
-            pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
-            pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0)),
-            pl.BlockSpec((1, p, block_rows, LANE),
-                         lambda wi, i, rr: (wi, 0, i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, p, 3), lambda wi, i, rr: (wi, 0, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_reduce_w_resident_kernel, block_rows=block_rows),
+        functools.partial(_reduce_w_resident_kernel, block_rows=block_rows,
+                          has_scales=ext_scales is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((wn, p, 3), jnp.float32),
         interpret=resolve_interpret(interpret),
-    )(row_range.astype(jnp.int32), w3d, dw3d, ext4d)
+    )(row_range.astype(jnp.int32), *operands)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "eps", "elastic", "elastic_alpha", "block_rows", "interpret"))
 def gossip_apply_w_resident_pallas(row_range, w3d, dw3d, ext4d, gates,
-                                   inv_denom, *, eps, elastic=False,
-                                   elastic_alpha=0.5, block_rows=64,
-                                   interpret=None):
+                                   inv_denom, ext_scales=None, *, eps,
+                                   elastic=False, elastic_alpha=0.5,
+                                   block_rows=64, interpret=None):
     """Packed-resident pass 2: per-worker gated mean + step, attraction
     restricted to the prefetched [row_start, row_end) partition; positions
-    outside take the plain SGD step.  Returns the updated (W, R, LANE)
-    states."""
+    outside take the plain SGD step.  ext4d may be int8 with ext_scales
+    (W, P, R // block_rows) — the dequantization is fused, as in pass 1.
+    Returns the updated (W, R, LANE) states."""
     wn, r = w3d.shape[:2]
     p = ext4d.shape[1]
     spec_s = pl.BlockSpec((1, block_rows, LANE), lambda wi, i, rr: (wi, i, 0))
+    in_specs = [
+        spec_s, spec_s,
+        pl.BlockSpec((1, p, block_rows, LANE),
+                     lambda wi, i, rr: (wi, 0, i, 0)),
+    ]
+    operands = [w3d, dw3d, ext4d]
+    if ext_scales is not None:
+        in_specs.append(pl.BlockSpec((1, p, 1), lambda wi, i, rr: (wi, 0, i)))
+        operands.append(ext_scales.astype(jnp.float32))
+    in_specs += [
+        pl.BlockSpec((1, p), lambda wi, i, rr: (wi, 0)),
+        pl.BlockSpec((1, 1), lambda wi, i, rr: (wi, 0)),
+    ]
+    operands += [gates, jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(wn, r // block_rows),
-        in_specs=[
-            spec_s, spec_s,
-            pl.BlockSpec((1, p, block_rows, LANE),
-                         lambda wi, i, rr: (wi, 0, i, 0)),
-            pl.BlockSpec((1, p), lambda wi, i, rr: (wi, 0)),
-            pl.BlockSpec((1, 1), lambda wi, i, rr: (wi, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=spec_s,
     )
     return pl.pallas_call(
         functools.partial(_apply_w_resident_kernel, eps=eps, elastic=elastic,
-                          elastic_alpha=elastic_alpha, block_rows=block_rows),
+                          elastic_alpha=elastic_alpha, block_rows=block_rows,
+                          has_scales=ext_scales is not None),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(w3d.shape, w3d.dtype),
         interpret=resolve_interpret(interpret),
-    )(row_range.astype(jnp.int32), w3d, dw3d, ext4d, gates,
-      jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1))
+    )(row_range.astype(jnp.int32), *operands)

@@ -101,11 +101,21 @@ def gossip_blend(w, exts, dw, eps, *, use_parzen: bool = True,
 # worker-batched entry points (the SPMD path)
 # ---------------------------------------------------------------------------
 
+def _scale_gates(gates, gate_scale):
+    """Multiply admission gates by a validity scalar or per-worker (W,)
+    vector (the round-1 staleness guard, core/gossip.py staleness_valid)
+    BEFORE the gated-mean denominator is formed."""
+    if gate_scale is None:
+        return gates
+    gs = jnp.asarray(gate_scale, jnp.float32)
+    return gates * (gs if gs.ndim == 0 else gs[:, None])
+
+
 def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
                                 use_parzen: bool = True, elastic: bool = False,
                                 elastic_alpha: float = 0.5,
                                 block_rows: int = 64, interpret=None,
-                                psum_axes=None):
+                                psum_axes=None, gate_scale=None):
     """Fused ASGD update for W local worker replicas on pre-packed states.
 
     w3d, dw3d: (W, R, LANE); ext4d: (W, P, R, LANE) — from packing.pack_w.
@@ -117,6 +127,8 @@ def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
       of the state also manually sharded (each shard then reduces only its
       slice of every replica; the gates need the global inner products, a
       (W, P, 3)-sized collective — see DESIGN.md §2.2).
+    gate_scale: optional scalar or (W,) f32 validity multiplier applied to
+      the gates before the denominator (the round-1 staleness guard).
 
     Returns (w_next (W, R, LANE), gates (W, P) f32).  Two HBM passes over
     the worker-stacked state, independent of P and W.
@@ -129,7 +141,8 @@ def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
                                  block_rows=block_rows, interpret=interpret)
     if psum_axes:
         acc = jax.lax.psum(acc, psum_axes)
-    gates = gossip_gates(acc, eps, use_parzen=use_parzen)
+    gates = _scale_gates(gossip_gates(acc, eps, use_parzen=use_parzen),
+                         gate_scale)
     inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
     out = gossip_apply_w_pallas(
         w3d, dw3d, ext4d, gates, inv_denom, mask2d, eps=float(eps),
@@ -139,9 +152,10 @@ def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
 
 
 def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
-                            use_parzen: bool = True, elastic: bool = False,
+                            ext_scales=None, use_parzen: bool = True,
+                            elastic: bool = False,
                             elastic_alpha: float = 0.5, block_rows: int = 64,
-                            interpret=None, psum_axes=None):
+                            interpret=None, psum_axes=None, gate_scale=None):
     """Packed-resident fused ASGD update for W local worker replicas.
 
     w3d, dw3d: (W, R, LANE); ext4d: (W, P, R, LANE) — the carried packed
@@ -153,6 +167,12 @@ def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
     array is built or read.  Row ranges may be empty (r0 == r1): every gate
     is then closed and the update degrades to the plain SGD step.
 
+    ext_scales: optional (W, P, R // block_rows) f32 — the int8 wire
+    (GossipConfig.wire_format="int8", core/packing.py quantize_rows):
+    ext4d is then int8 and both passes dequantize in-register, reading a
+    quarter of the external's f32 bytes.  gate_scale: optional scalar or
+    (W,) validity multiplier on the gates (round-1 staleness guard).
+
     Returns (w_next (W, R, LANE), gates (W, P) f32); two HBM passes over
     the worker-stacked state reading exactly w+dw+ext each.
     """
@@ -161,15 +181,17 @@ def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
     if p == 0:
         return w3d - eps * dw3d, jnp.zeros((wn, 0), jnp.float32)
     acc = gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d,
+                                          ext_scales,
                                           block_rows=block_rows,
                                           interpret=interpret)
     if psum_axes:
         acc = jax.lax.psum(acc, psum_axes)
-    gates = gossip_gates(acc, eps, use_parzen=use_parzen)
+    gates = _scale_gates(gossip_gates(acc, eps, use_parzen=use_parzen),
+                         gate_scale)
     inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
     out = gossip_apply_w_resident_pallas(
-        row_range, w3d, dw3d, ext4d, gates, inv_denom, eps=float(eps),
-        elastic=elastic, elastic_alpha=float(elastic_alpha),
+        row_range, w3d, dw3d, ext4d, gates, inv_denom, ext_scales,
+        eps=float(eps), elastic=elastic, elastic_alpha=float(elastic_alpha),
         block_rows=block_rows, interpret=interpret)
     return out, gates
 

@@ -121,6 +121,123 @@ def gossip_blend_w_ref(w, exts, dw, eps, *, mask=None, use_parzen: bool = True,
     return w_next, gates
 
 
+def gossip_blend_w_resident_ref(w3d, dw3d, ext4d, row_range, eps, *,
+                                ext_scales=None, block_rows=64,
+                                use_parzen: bool = True,
+                                elastic: bool = False,
+                                elastic_alpha: float = 0.5):
+    """jnp oracle for the packed-resident kernel, int8 wire included.
+
+    w3d/dw3d: (W, R, LANE); ext4d: (W, P, R, LANE) float — or int8 with
+    ext_scales (W, P, R // block_rows) f32, in which case the external is
+    dequantized through core.packing.dequantize_rows, the BIT-IDENTICAL
+    jnp form of the kernel's fused in-register dequantization (same
+    q.astype(f32) * scale per element).  row_range: (2,) int row window of
+    the exchanged partition.  Returns (w_next (W, R, LANE), gates (W, P)).
+    This is the fake-quant reference path of the parity tests and the
+    quantized_wire benchmark record.
+    """
+    from repro.core.packing import dequantize_rows
+
+    wn, r, lane = w3d.shape
+    if ext_scales is not None:
+        ext4d = dequantize_rows(ext4d, ext_scales, block_rows)
+    rows = jnp.arange(r)
+    mask = jnp.broadcast_to(
+        ((rows >= row_range[0]) & (rows < row_range[1]))
+        .astype(jnp.float32)[:, None], (r, lane)).reshape(-1)
+    out, gates = gossip_blend_w_batched(
+        w3d.reshape(wn, -1), ext4d.reshape(wn, ext4d.shape[1], -1),
+        dw3d.reshape(wn, -1), eps, mask=mask, use_parzen=use_parzen,
+        elastic=elastic, elastic_alpha=elastic_alpha)
+    return out.reshape(w3d.shape), gates
+
+
+def quantized_round_reference(packed, pdw, buf_q, buf_s, buf_idx, step, key,
+                              cfg, acfg, spec, ranges):
+    """One int8-wire packed-resident round through the jnp fake-quant path.
+
+    The SINGLE reference implementation of what asgd_gossip_apply_packed
+    does under wire_format="int8" — same key-draw schedule, same quantized
+    exchange (core.gossip.exchange_packed), same round-1 staleness guard
+    (core.gossip.staleness_valid), but the blend is the fake-quant jnp
+    oracle (gossip_blend_w_resident_ref) instead of the kernel.  Shared by
+    the parity tests (tests/test_gossip_wire.py) and the quantized_wire
+    benchmark record (benchmarks/spmd_step.py) so the two cannot drift.
+
+    Returns (new_packed, sent_q, sent_scales, block_idx, gate (W,)).
+    """
+    import jax
+
+    from repro.core.gossip import exchange_packed, staleness_valid
+
+    k_shift, k_blk = jax.random.split(key)
+    shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
+    block_idx = jax.random.randint(k_blk, (), 0, cfg.partial_blocks)
+    sent_q, sent_s = exchange_packed(packed, ranges, shift_idx, block_idx,
+                                     cfg, block_rows=spec.block_rows)
+    if cfg.delay == 0:
+        ext_q, ext_s, ext_idx, valid = sent_q, sent_s, block_idx, None
+    else:
+        ext_q, ext_s, ext_idx = buf_q, buf_s, buf_idx
+        valid = staleness_valid(jnp.asarray(step, jnp.int32), cfg)
+    rr = jnp.asarray(ranges, jnp.int32)[ext_idx]
+    out, gates = gossip_blend_w_resident_ref(
+        packed, pdw, ext_q[:, None], rr, acfg.eps,
+        ext_scales=ext_s[:, None], block_rows=spec.block_rows,
+        use_parzen=acfg.use_parzen, elastic=acfg.elastic,
+        elastic_alpha=acfg.elastic_alpha)
+    gate = gates[:, 0]
+    if valid is not None:
+        # all-zero gates reduce the blend to the plain SGD step in both
+        # paper and elastic modes, so the guard is a clean select
+        out = jnp.where(valid > 0, out, packed - acfg.eps * pdw)
+        gate = gate * valid
+    return out, sent_q, sent_s, block_idx, gate
+
+
+def run_quantized_parity(params, grads, cfg, acfg, spec, rounds=3):
+    """Drive the packed int8-wire engine and the fake-quant reference side
+    by side for ``rounds`` rounds from a fresh init, on the SAME key
+    schedule.  The one parity driver shared by the acceptance tests
+    (tests/test_gossip_wire.py TestQuantizedWireParity) and the
+    quantized_wire benchmark gate (benchmarks/spmd_step.py) — comparison
+    inputs cannot drift between the two.
+
+    Returns (per_round, final_state): per_round is a list of dicts with
+    keys ``engine_packed``, ``ref_packed``, ``engine_gate``, ``ref_gate``;
+    final_state is the engine's last PackedGossipState (for buffer
+    dtype/shape assertions).
+    """
+    import jax
+
+    from repro.core.gossip import (asgd_gossip_apply_packed,
+                                   init_packed_gossip_state,
+                                   packed_row_ranges)
+    from repro.core.packing import pack_w
+
+    ranges = packed_row_ranges(spec, cfg)
+    packed = pack_w(params, spec)
+    pdw = pack_w(grads, spec)
+    state = init_packed_gossip_state(packed, cfg,
+                                     block_rows=spec.block_rows)
+    ref_pk, ref_buf, ref_s = packed, state.buf, state.buf_scales
+    ref_idx = state.buf_idx
+    per_round = []
+    for i in range(rounds):
+        key = jax.random.key(i)
+        packed, state, m = asgd_gossip_apply_packed(
+            packed, pdw, state, key, cfg, acfg, spec)
+        ref_pk, ref_buf, ref_s, ref_idx, ref_gate = \
+            quantized_round_reference(ref_pk, pdw, ref_buf, ref_s,
+                                      ref_idx, i, key, cfg, acfg, spec,
+                                      ranges)
+        per_round.append({"engine_packed": packed, "ref_packed": ref_pk,
+                          "engine_gate": m["gate"],
+                          "ref_gate": ref_gate})
+    return per_round, state
+
+
 def gossip_blend_w_batched(w, exts, dw, eps, *, mask=None,
                            use_parzen: bool = True, elastic: bool = False,
                            elastic_alpha: float = 0.5):

@@ -165,17 +165,31 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     """The whole packed-resident gossip round — exchange AND blend — in one
     shard_map manual region (DESIGN.md §6).
 
-    Returns a jittable
-    ``round(packed, pgrads, buf, buf_idx, shift_idx, block_idx)
-    -> (new_packed, new_buf, gates)`` over global ``(W, R, LANE)`` arrays.
+    Returns a jittable round function over global ``(W, R, LANE)`` arrays:
+
+      * float wire (wire_format None/"dtype"):
+        ``round(packed, pgrads, buf, buf_idx, step, shift_idx, block_idx)
+        -> (new_packed, sent, gates)``
+      * int8 wire (wire_format="int8"):
+        ``round(packed, pgrads, buf, buf_scales, buf_idx, step, shift_idx,
+        block_idx) -> (new_packed, sent, sent_scales, gates)`` — the
+        exchanged slice is quantized per shard (core/packing.py
+        quantize_rows), the ``lax.ppermute`` moves the int8 payload plus
+        the per-block_rows f32 scales (|w|/(4p) + ~|w|/(4p·block_rows·LANE)
+        wire bytes), and the resident kernel dequantizes in-register.
+
+    ``step`` is the round counter driving the round-1 staleness guard
+    (core/gossip.py staleness_valid): with delay > 0 the first round's
+    zero init buffer is explicitly gated out.
+
     Inside the region each data shard sees its ``(W_local, R, LANE)`` slice;
     the partial exchange is a static row-slice ``lax.ppermute`` over the
-    (pod+)data axes (wire bytes |w|/p, the paper's one-peer send) and the
-    blend is the row-range resident Pallas kernel
-    (``gossip_blend_w_resident``) — exchange and blend share one manual
-    region, so XLA never re-lays-out the packed ensemble between them.
-    The GSPMD path (core.gossip.asgd_gossip_apply_packed) remains the
-    in-jit formulation of the same round; this is the production wiring.
+    (pod+)data axes (the paper's one-peer send) and the blend is the
+    row-range resident Pallas kernel (``gossip_blend_w_resident``) —
+    exchange and blend share one manual region, so XLA never re-lays-out
+    the packed ensemble between them.  The GSPMD path
+    (core.gossip.asgd_gossip_apply_packed) remains the in-jit formulation
+    of the same round; this is the production wiring.
 
     spec: group-contiguous WPackSpec (core/packing.py); cfg/acfg:
     GossipConfig/ASGDConfig; n_workers: global worker count (defaults to
@@ -184,7 +198,9 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
 
-    from ..core.gossip import packed_row_ranges
+    from ..core.gossip import (packed_row_ranges, quantized_exchange_body,
+                               resolved_wire_format, staleness_valid,
+                               wire_roundtrip)
     from ..kernels.gossip_blend import gossip_blend_w_resident
 
     wa = data_axes(mesh)
@@ -198,37 +214,73 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     ranges = packed_row_ranges(spec, cfg)
     ranges_arr = jnp.asarray(ranges, jnp.int32)
     p = cfg.partial_blocks
+    wire = resolved_wire_format(cfg)
 
-    def round_fn(packed, pgrads, buf, buf_idx, shift_idx, block_idx):
-        def branch(s, r0, r1):
-            def body(x):
-                blk = x[:, r0:r1]
-                if cfg.payload_dtype is not None:
-                    blk = blk.astype(cfg.payload_dtype).astype(x.dtype)
-                rolled = _roll_workers_manual(blk, s, axis_name, n_shards,
-                                              w_local)
-                return jnp.zeros_like(x).at[:, r0:r1].set(rolled)
-            return body
+    def roll(x, s):
+        return _roll_workers_manual(x, s, axis_name, n_shards, w_local)
 
-        branches = [branch(s, r0, r1)
-                    for s in cfg.shifts for (r0, r1) in ranges]
-        sent = jax.lax.switch(shift_idx * p + block_idx, branches, packed)
-        if cfg.delay == 0:
-            ext, ext_idx = sent, block_idx
-        else:
-            ext, ext_idx = buf, buf_idx
-        row_range = ranges_arr[ext_idx]
+    def blend(packed, pgrads, ext, ext_scales, ext_idx, step):
+        valid = staleness_valid(step, cfg)
         new_packed, gates = gossip_blend_w_resident(
-            packed, pgrads, ext[:, None], row_range, acfg.eps,
+            packed, pgrads, ext[:, None], ranges_arr[ext_idx], acfg.eps,
+            ext_scales=None if ext_scales is None else ext_scales[:, None],
             use_parzen=acfg.use_parzen, elastic=acfg.elastic,
             elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-            psum_axes=cfg.gate_psum_axes or None)
-        return new_packed, sent, gates[:, 0]
+            psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+        return new_packed, gates[:, 0]
+
+    if wire == "int8":
+        def round_fn(packed, pgrads, buf, buf_scales, buf_idx, step,
+                     shift_idx, block_idx):
+            def branch(s, r0, r1):
+                def body(x):
+                    # shared quantize/scatter body; only the roll transport
+                    # (ppermute here, jnp.roll in the GSPMD engine) differs
+                    return quantized_exchange_body(
+                        x, r0, r1, spec.block_rows,
+                        lambda t: roll(t, s))
+                return body
+
+            branches = [branch(s, r0, r1)
+                        for s in cfg.shifts for (r0, r1) in ranges]
+            sent, sent_scales = jax.lax.switch(
+                shift_idx * p + block_idx, branches, packed)
+            if cfg.delay == 0:
+                ext, ext_scales, ext_idx = sent, sent_scales, block_idx
+            else:
+                ext, ext_scales, ext_idx = buf, buf_scales, buf_idx
+            new_packed, gates = blend(packed, pgrads, ext, ext_scales,
+                                      ext_idx, step)
+            return new_packed, sent, sent_scales, gates
+
+        n_split_in, n_out = 4, 4
+    else:
+        def round_fn(packed, pgrads, buf, buf_idx, step, shift_idx,
+                     block_idx):
+            def branch(s, r0, r1):
+                def body(x):
+                    blk = wire_roundtrip(x[:, r0:r1], cfg)
+                    return jnp.zeros_like(x).at[:, r0:r1].set(roll(blk, s))
+                return body
+
+            branches = [branch(s, r0, r1)
+                        for s in cfg.shifts for (r0, r1) in ranges]
+            sent = jax.lax.switch(shift_idx * p + block_idx, branches,
+                                  packed)
+            if cfg.delay == 0:
+                ext, ext_idx = sent, block_idx
+            else:
+                ext, ext_idx = buf, buf_idx
+            new_packed, gates = blend(packed, pgrads, ext, None, ext_idx,
+                                      step)
+            return new_packed, sent, gates
+
+        n_split_in, n_out = 3, 3
 
     split = jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
     rep = jax.sharding.PartitionSpec()
     return shard_map(
         round_fn, mesh=mesh,
-        in_specs=(split, split, split, rep, rep, rep),
-        out_specs=(split, split, split),
+        in_specs=(split,) * n_split_in + (rep,) * 4,
+        out_specs=(split,) * n_out,
         check_rep=False)

@@ -175,11 +175,20 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
       dispatch) compose with the vmap.
     packed_resident: carry the packed (W, R, LANE) ensemble across steps
       (DESIGN.md §6): ``params`` is the packed array, ``gossip`` a
-      PackedGossipState, and the gossip round runs entirely on packed rows
-      (asgd_gossip_apply_packed) — the forward pass reads unpacked VIEWS of
-      the resident buffer (XLA fuses the reshape/slice into the consumers)
-      and the only per-round packing is the gradient tree.  Requires
-      ``pack_spec`` (a group-contiguous WPackSpec for 'leaves' mode).
+      PackedGossipState (init_packed_gossip_state(packed, gcfg,
+      block_rows=pack_spec.block_rows) — int8 zeros + zero scales under
+      gcfg.wire_format="int8"), and the gossip round runs entirely on
+      packed rows (asgd_gossip_apply_packed) — the forward pass reads
+      unpacked VIEWS of the resident buffer (XLA fuses the reshape/slice
+      into the consumers) and the only per-round packing is the gradient
+      tree.  Requires ``pack_spec`` (a group-contiguous WPackSpec for
+      'leaves' mode).
+
+    Wire format / staleness: gcfg.wire_format selects what the gossip
+    collective ships (DESIGN.md §6 wire formats — "int8" quantizes the
+    exchanged block, wire bytes /4), and every algo='asgd' round applies
+    the round-1 staleness guard (the delay>0 init buffer is gated out
+    explicitly at step 0 rather than via eq.-3 zero detection).
     """
     from ..optim import (adam_update, momentum_update)
 

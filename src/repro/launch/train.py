@@ -56,6 +56,14 @@ def main(argv=None):
                          "(paper: sgd)")
     ap.add_argument("--partial-blocks", type=int, default=4)
     ap.add_argument("--delay", type=int, default=1)
+    ap.add_argument("--wire-format", default="none",
+                    choices=["none", "int8", "bf16", "f16"],
+                    help="gossip wire format (DESIGN.md §6): 'int8' ships "
+                         "the exchanged block as int8 + per-block f32 "
+                         "scales (wire bytes /4; on --packed-resident the "
+                         "staleness buffer stays quantized and the kernel "
+                         "dequantizes in-register); 'bf16'/'f16' cast the "
+                         "payload dtype; 'none' sends the carrier dtype")
     ap.add_argument("--elastic", action="store_true",
                     help="beyond-paper elastic blending")
     ap.add_argument("--packed-resident", action="store_true",
@@ -80,9 +88,16 @@ def main(argv=None):
     W = args.workers
     wparams = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (W,) + x.shape).copy(), params)
+    wire_format, payload_dtype = {
+        "none": (None, None),
+        "int8": ("int8", None),
+        "bf16": ("dtype", jnp.bfloat16),
+        "f16": ("dtype", jnp.float16),
+    }[args.wire_format]
     gcfg = GossipConfig(
         shifts=tuple(s for s in (1, 2, 4, 8) if s < max(W, 2)),
-        partial_blocks=args.partial_blocks, delay=args.delay)
+        partial_blocks=args.partial_blocks, delay=args.delay,
+        wire_format=wire_format, payload_dtype=payload_dtype)
     acfg = ASGDConfig(eps=args.eps, elastic=args.elastic)
     from .steps import init_inner_state
     spec = None
@@ -95,7 +110,8 @@ def main(argv=None):
             n_groups=gcfg.partial_blocks)
         packed = pack_w(wparams, spec)
         state = {"params": packed,
-                 "gossip": init_packed_gossip_state(packed),
+                 "gossip": init_packed_gossip_state(
+                     packed, gcfg, block_rows=spec.block_rows),
                  "opt": init_inner_state(wparams, args.inner),
                  "step": jnp.int32(0)}
         if args.restore:

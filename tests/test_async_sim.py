@@ -62,6 +62,7 @@ class TestThreadedSimulator:
         return (np.asarray(x, np.float64), np.asarray(w0, np.float64),
                 np.asarray(centers, np.float64))
 
+    @pytest.mark.slow
     def test_async_beats_silent_iterations_to_error(self, data):
         """Paper claim C1/C6: communication drives EARLY convergence — both
         modes reach similar final error (paper Fig. 9), so compare the
@@ -101,6 +102,7 @@ class TestThreadedSimulator:
             x, w0, seed=3)
         assert out["error_first"] < out["err_trace"][0][0]
 
+    @pytest.mark.slow
     def test_first_vs_mean_aggregation_close(self, data):
         """Paper C5 (Figs. 16/17): returning w^1 ≈ MapReduce aggregate.
 
@@ -125,6 +127,7 @@ class TestRoundSimulator:
         shards = shard_data(jax.random.key(4), x, 8)
         return x, w0, shards
 
+    @pytest.mark.slow
     def test_asgd_faster_than_silent(self, setup):
         x, w0, shards = setup
         mk = lambda silent: RoundSimConfig(
@@ -135,6 +138,7 @@ class TestRoundSimulator:
         assert float(out["errors"][-1]) < float(out_s["errors"][-1])
         assert float(out["n_good"].mean()) > 0
 
+    @pytest.mark.slow
     def test_drop_rate_harmless(self, setup):
         """Paper §4.4: lost messages 'completely harmless' — convergence
         still beats silent even with 50% drops."""

@@ -21,7 +21,8 @@ def make(spec_kw=None, B=2, S=2048, seed=0):
 
 
 class TestFlashVsDense:
-    @pytest.mark.parametrize("S", [2048, 4096])
+    @pytest.mark.parametrize(
+        "S", [2048, pytest.param(4096, marks=pytest.mark.slow)])
     def test_causal(self, S):
         spec, params, x, pos = make(B=1, S=S)
         out_f = attention_flash(params, spec, x, pos,
@@ -51,6 +52,7 @@ class TestFlashVsDense:
                                 prefix_mask(qpos, qpos, prefix))
         np.testing.assert_allclose(out_f, out_d, rtol=2e-4, atol=2e-5)
 
+    @pytest.mark.slow
     def test_qkv_bias_and_qknorm_variants(self):
         for kw in ({"qkv_bias": True}, {"qk_norm": True},
                    {"qkv_bias": True, "qk_norm": True},

@@ -200,6 +200,7 @@ class TestPackedResidentParity:
                                        np.asarray(p_ref[k]),
                                        rtol=1e-5, atol=1e-6)
 
+    @pytest.mark.slow
     def test_gossip_every_parity(self):
         p_ref, m_ref, p_pk, m_pk = self._run_leaves(gossip_every=2,
                                                     steps=5)
@@ -376,6 +377,7 @@ class TestPackedCheckpoint:
 
 
 class TestPackedTrainStep:
+    @pytest.mark.slow
     def test_packed_step_matches_pytree_step(self):
         """make_train_step(packed_resident=True) follows the pytree ASGD
         step (use_fused=False jnp reference) loss-for-loss on a reduced
@@ -455,7 +457,10 @@ PPERMUTE_SCRIPT = textwrap.dedent("""
         block_rows=spec.block_rows)
     for si in range(4):
         for bi in range(2):
+            # step=1: buf is a real received block, the round-1 staleness
+            # guard must not close the gates
             out, sent, gates = round_m(packed, pdw, buf, jnp.int32(1),
+                                       jnp.int32(1),
                                        jnp.int32(si), jnp.int32(bi))
             # the in-region ppermute exchange == the GSPMD jnp.roll one
             sent_ref = exchange_packed(packed, ranges, jnp.int32(si),
@@ -468,8 +473,8 @@ PPERMUTE_SCRIPT = textwrap.dedent("""
                                        rtol=1e-5, atol=1e-6)
             np.testing.assert_array_equal(np.asarray(gates),
                                           np.asarray(gates_ref[:, 0]))
-    txt = round_m.lower(packed, pdw, buf, jnp.int32(1), jnp.int32(0),
-                        jnp.int32(0)).compile().as_text()
+    txt = round_m.lower(packed, pdw, buf, jnp.int32(1), jnp.int32(1),
+                        jnp.int32(0), jnp.int32(0)).compile().as_text()
     assert "collective-permute" in txt, "exchange must be collective-permute"
     print("PPERMUTE-ROUND-OK")
 """)

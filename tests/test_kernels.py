@@ -53,6 +53,7 @@ class TestKmeansAssign:
         np.testing.assert_allclose(
             dw_kernel, minibatch_delta(x, w), rtol=1e-4, atol=1e-5)
 
+    @pytest.mark.slow
     @given(st.integers(0, 2**31 - 1), st.integers(2, 40),
            st.integers(2, 20))
     @settings(max_examples=10, deadline=None)

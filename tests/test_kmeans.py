@@ -16,6 +16,7 @@ class TestAssign:
             jnp.sum((x[:, None, :] - w[None, :, :]) ** 2, axis=-1), axis=-1)
         np.testing.assert_array_equal(kmeans.assign(x, w), naive)
 
+    @pytest.mark.slow
     @given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(1, 6))
     @settings(max_examples=25, deadline=None)
     def test_assign_property(self, seed, k, d):

@@ -28,6 +28,7 @@ def dense_moe_reference(params, x, topk, act="silu"):
     return y.reshape(B, S, D), aux
 
 
+@pytest.mark.slow
 class TestBlockedCumsum:
     @given(st.integers(1, 5000), st.integers(1, 8), st.integers(0, 100))
     @settings(max_examples=30, deadline=None)
