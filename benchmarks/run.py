@@ -14,6 +14,8 @@ Usage:
       --out BENCH_gossip_blend.json                  # + JSON records
   PYTHONPATH=src python -m benchmarks.run kernel_vs_ref_block_rows \
       --block-rows 32,64,128,256                     # block_rows sweep
+  PYTHONPATH=src python -m benchmarks.run spmd kernel_vs_ref --tiny \
+      # CI smoke: same dataflow + parity gates at ~1/256 state size
 
 --out PATH writes every machine-readable record collected by the selected
 benchmarks (benchmarks.common.record) plus the CSV rows as JSON — the perf
@@ -28,7 +30,7 @@ import traceback
 
 
 def _parse_args(argv):
-    filters, out, block_rows = [], None, None
+    filters, out, block_rows, tiny = [], None, None, False
     it = iter(argv)
     for a in it:
         if a == "--out":
@@ -43,17 +45,24 @@ def _parse_args(argv):
                 raise SystemExit("--block-rows requires a comma list")
         elif a.startswith("--block-rows="):
             block_rows = a.split("=", 1)[1]
+        elif a == "--tiny":
+            tiny = True
         elif not a.startswith("-"):
             filters.append(a)
     if block_rows is not None:
         block_rows = tuple(int(x) for x in block_rows.split(",") if x)
-    return filters, out, block_rows
+    return filters, out, block_rows, tiny
 
 
 def main() -> None:
-    filters, out_path, block_rows = _parse_args(sys.argv[1:])
+    filters, out_path, block_rows, tiny = _parse_args(sys.argv[1:])
 
     from . import paper_figs, roofline_report, spmd_step, stragglers
+    if tiny:
+        # CI smoke lane: identical dataflow + derived/parity gates, state
+        # sizes shrunk so every selected benchmark finishes in seconds —
+        # execute-rot coverage, not a measurement (spmd_step._sz)
+        spmd_step.TINY = True
     if block_rows:
         # kernel_vs_ref_block_rows sweep values (spmd_step.py)
         spmd_step.BLOCK_ROWS_SWEEP = block_rows

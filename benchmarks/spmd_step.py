@@ -34,10 +34,22 @@ from .common import emit, record, time_jax
 # ``benchmarks.run ... --block-rows 32,64,128,256``
 BLOCK_ROWS_SWEEP = (32, 64, 128, 256)
 
+# ``benchmarks.run --tiny`` (the CI smoke lane) flips this to True: every
+# benchmark keeps its exact dataflow and derived/parity gates but shrinks
+# the state sizes ~64-256x, so one pass over ALL functions finishes in a
+# couple of minutes on the CI host — import+execute rot coverage, not a
+# measurement (the emitted wall numbers are meaningless at tiny shapes)
+TINY = False
+
+
+def _sz(full: int, tiny: int) -> int:
+    """Benchmark size knob: ``full`` normally, ``tiny`` under --tiny."""
+    return tiny if TINY else full
+
 
 def _params(W=4, n_mb=8):
     """~n_mb MiB of f32 params per worker across a few leaves."""
-    n = n_mb * (1 << 20) // 4
+    n = _sz(n_mb, 1) * (1 << 20) // 4
     k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
     return {
         "emb": jax.random.normal(k1, (W, n // 2 // 1024, 1024)),
@@ -157,19 +169,36 @@ def _spmd_sweep_counts() -> dict:
             # passes (0.25 units each instead of 1) — pass 1 = 2.25,
             # pass 2 = 3.25, grad pack = 2 -> 7.5 units; the per-block
             # scales add 4/(block_rows*LANE) of a unit (~0.01%, ignored)
-            "quantized_wire_passes": 2, "quantized_wire_bytes": 7.5}
+            "quantized_wire_passes": 2, "quantized_wire_bytes": 7.5,
+            # pipelined round (ISSUE 5): the gradient is BORN packed (the
+            # loss is differentiated w.r.t. the resident ensemble through
+            # unpack_rows views, so the +2-unit pack_w(grads) copy
+            # disappears) and the eq.-1 update is fused in-register via
+            # the kernel's runtime lr operand — the round is exactly the
+            # two kernel passes: int8 wire 2.25 + 3.25 = 5.5 units, f32
+            # wire 3 + 4 = 7.  The payload ppermute overlaps the next
+            # forward/backward (its ~1/p wire unit stays in the
+            # collective tables, not here).
+            "pipelined_passes": 2, "pipelined_bytes": 5.5,
+            "pipelined_bytes_f32": 7.0}
 
 
 def _wire_bytes(spec, ranges) -> dict:
     """Exact per-worker collective payload of one partial exchange, in
     bytes, averaged over the p partitions (the partition is drawn
-    uniformly): f32 wire vs int8 wire (+ the f32 scale sidecar)."""
+    uniformly).  The int8 figures describe the ACTUAL shipped payload —
+    int8 rows PLUS the f32 per-block_rows scale sidecar that travels with
+    them — not the pre-quantization f32 slice; ``wire_ratio`` is therefore
+    shipped-int8-total / shipped-f32, marginally above 1/4 by the sidecar
+    term 1/(block_rows·LANE)."""
     slice_rows_total = sum(r1 - r0 for r0, r1 in ranges)
     mean_rows = slice_rows_total / len(ranges)
     f32 = mean_rows * LANE * 4
-    int8 = mean_rows * LANE * 1
+    payload = mean_rows * LANE * 1
     scales = mean_rows / spec.block_rows * 4
+    int8 = payload + scales          # what the collective actually moves
     return {"wire_bytes_f32": f32, "wire_bytes_int8": int8,
+            "wire_bytes_int8_payload": payload,
             "wire_scale_bytes": scales,
             "wire_ratio": int8 / f32 if f32 else 0.0}
 
@@ -191,7 +220,7 @@ def kernel_vs_ref():
         itself (interpret auto-mode, timed at P=5 only — it measures the
         interpreter, recorded to track its overhead, not as a speedup).
     """
-    n = 1 << 22  # 16 MiB f32 state: memory-bound regime
+    n = _sz(1 << 22, 1 << 16)  # 16 MiB f32 state: memory-bound regime
     acfg = ASGDConfig(eps=0.05)
     ks = jax.random.split(jax.random.key(0), 2)
     w = jax.random.normal(ks[0], (n,))
@@ -245,7 +274,7 @@ def kernel_vs_ref():
     # kernel itself under interpret auto-mode (interpreter overhead
     # tracking, not a speedup claim). ---
     wn = 4
-    nw = 1 << 20  # 4 MiB f32 per worker -> 16 MiB ensemble
+    nw = _sz(1 << 20, 1 << 14)  # 4 MiB f32 per worker -> 16 MiB ensemble
     kw = jax.random.split(jax.random.key(1), 2)
     w_w = jax.random.normal(kw[0], (wn, nw))
     dw_w = jax.random.normal(kw[1], (wn, nw)) * 0.1
@@ -296,10 +325,11 @@ def _packed_resident_record():
     wn = 4
     acfg = ASGDConfig(eps=0.05)
     ks = jax.random.split(jax.random.key(2), 2)
+    d0 = _sz(1024, 64)
     params = {
-        "emb": jax.random.normal(ks[0], (wn, 1024, 512)),
-        "ffw": jax.random.normal(ks[1], (wn, 512, 512)),
-        "out": jax.random.normal(jax.random.key(3), (wn, 256, 512)),
+        "emb": jax.random.normal(ks[0], (wn, d0, 512)),
+        "ffw": jax.random.normal(ks[1], (wn, d0 // 2, 512)),
+        "out": jax.random.normal(jax.random.key(3), (wn, d0 // 4, 512)),
     }
     grads = jax.tree.map(lambda x: 0.01 * x, params)
     p = 2
@@ -463,6 +493,131 @@ def _quantized_wire_record(wn, p, spec, w3, d3, ext3, n_per_worker):
            wire_bytes=wb["wire_bytes_int8"],
            parity_partial_mode_x_delay=parity, **wb, **sc)
 
+    # --- pipelined: the one-round-deep exchange pipeline + packed-native
+    # gradients (ISSUE 5).  Same int8 scenario; the unpipelined side pays
+    # the per-round pack_w(grads) copy the pipelined train step no longer
+    # performs (the loss is differentiated w.r.t. the packed ensemble), so
+    # the round is exactly the two fused kernel passes: 7.5 -> 5.5 sweep
+    # units.  Parity of the pipelined engine against the unpipelined
+    # engine at delay+1 is asserted inline across
+    # partial_mode x wire_format (the acceptance gate). ---
+    _pipelined_record(wn, p, spec, w3, d3, ext3, n_per_worker)
+
+
+def _pipelined_parity_ok() -> bool:
+    """Pipelined-vs-unpipelined(delay+1) parity across
+    partial_mode x wire_format on a small state; True iff gates match
+    exactly and states match bit-for-bit (float wire) / to f32 tolerance
+    (int8 wire).  The side-by-side driver is run_pipelined_parity — the
+    SAME helper the acceptance tests use
+    (tests/test_gossip_pipelined.py), so benchmark and test semantics
+    cannot drift."""
+    import numpy as _np
+
+    from repro.kernels.gossip_blend.ref import run_pipelined_parity
+
+    acfg = ASGDConfig(eps=0.05)
+    ks = jax.random.split(jax.random.key(11), 3)
+    for mode in ("leaves", "rows"):
+        if mode == "leaves":
+            params = {"a": jax.random.normal(ks[0], (4, 16, 8)),
+                      "b": jax.random.normal(ks[1], (4, 6)),
+                      "c": jax.random.normal(ks[2], (4, 8, 4))}
+        else:   # 'rows' + int8 needs >= p * block_rows packed rows
+            params = {"w": jax.random.normal(ks[0], (4, 8, LANE))}
+        grads = jax.tree.map(lambda x: 0.05 * jnp.sign(x), params)
+        for wf in (None, "int8"):
+            cfg = GossipConfig(shifts=(1, 2), partial_blocks=2,
+                               partial_mode=mode, delay=1, wire_format=wf)
+            spec = (pack_spec_w(params, block_rows=2,
+                                groups=leaf_groups(params, 2), n_groups=2)
+                    if mode == "leaves"
+                    else pack_spec_w(params, block_rows=2))
+            per_round, _ = run_pipelined_parity(params, grads, cfg, acfg,
+                                                spec, rounds=4)
+            for r in per_round:
+                gates_ok = _np.array_equal(_np.asarray(r["pipe_gate"]),
+                                           _np.asarray(r["ref_gate"]))
+                if wf is None:
+                    state_ok = _np.array_equal(
+                        _np.asarray(r["pipe_packed"]),
+                        _np.asarray(r["ref_packed"]))
+                else:
+                    state_ok = _np.allclose(_np.asarray(r["pipe_packed"]),
+                                            _np.asarray(r["ref_packed"]),
+                                            rtol=1e-6, atol=1e-6)
+                if not (gates_ok and state_ok):
+                    return False
+    return True
+
+
+def _pipelined_record(wn, p, spec, w3, d3, ext3, n_per_worker):
+    """The ISSUE-5 record: per-round cost of the pipelined round (grads
+    born packed, fused lr update, blend of the FIFO-head payload) vs the
+    unpipelined int8 round that still packs the gradient tree."""
+    acfg = ASGDConfig(eps=0.05)
+    blk = jnp.int32(0)
+    rr = jnp.asarray(spec.group_row_ranges, jnp.int32)[blk]
+    q3, sc3 = quantize_rows(ext3, spec.block_rows)
+    grads_tree = unpack_w(d3, spec)   # what the backward pass emits
+
+    def blend_q(w3, q3, sc3, d3):
+        """jnp stand-in of the fused consume (dequant + blend + eq.-1)."""
+        ext = dequantize_rows(q3, sc3, spec.block_rows)
+        rows = jnp.arange(spec.rows, dtype=jnp.int32)
+        m = jnp.broadcast_to(
+            ((rows >= rr[0]) & (rows < rr[1]))
+            .astype(jnp.float32)[:, None], (spec.rows, LANE)).reshape(-1)
+        out, _ = gossip_blend_w_batched(
+            w3.reshape(wn, -1), ext.reshape(wn, 1, -1),
+            d3.reshape(wn, -1), acfg.eps, mask=m)
+        return out.reshape(wn, spec.rows, LANE)
+
+    def unpipelined(w3, q3, sc3, gtree):
+        return blend_q(w3, q3, sc3, pack_w(gtree, spec))  # per-round pack
+
+    us_unpipe = time_jax(jax.jit(unpipelined), w3, q3, sc3, grads_tree)
+    us_pipe = time_jax(jax.jit(blend_q), w3, q3, sc3, d3)
+
+    # the fused-update resident kernel (runtime lr operand; block_rows
+    # resolved from the quantization tile), interpret-overhead tracking
+    f_kernel = jax.jit(lambda w, d, q, s: gossip_blend_w_resident(
+        w, d, q[:, None], rr, acfg.eps, lr=acfg.eps,
+        ext_scales=s[:, None])[0])
+    us_kernel = time_jax(f_kernel, w3, d3, q3, sc3, iters=2, warmup=1)
+
+    sc = _spmd_sweep_counts()
+    cfg = GossipConfig(shifts=(1,), partial_blocks=p,
+                       partial_mode="leaves", wire_format="int8")
+    wb = _wire_bytes(spec, packed_row_ranges(spec, cfg))
+    if not _pipelined_parity_ok():
+        # the acceptance gate must fail the harness loudly, not just
+        # write parity=false into the JSON artifact
+        raise RuntimeError(
+            "pipelined: engine vs unpipelined-at-delay+1 parity FAILED "
+            "across partial_mode x wire_format")
+    # past the gate parity is necessarily ok — recorded as the attestation
+    # that the gate ran, not as a variable measurement
+    emit(f"spmd/gossip_blend/pipelined/W={wn}", us_pipe,
+         f"unpipelined_us={us_unpipe:.1f};"
+         f"wall_speedup={us_unpipe / us_pipe:.2f};"
+         f"pipelined_bytes={sc['pipelined_bytes']};"
+         f"pipelined_bytes_f32={sc['pipelined_bytes_f32']};"
+         f"quantized_wire_bytes={sc['quantized_wire_bytes']};"
+         f"wire_bytes_int8={wb['wire_bytes_int8']:.0f};"
+         f"wire_ratio={wb['wire_ratio']:.4f};"
+         "parity=ok;"
+         f"pallas_interpret_us={us_kernel:.1f}")
+    record("pipelined", W=wn, p=p, n_per_worker=n_per_worker,
+           state_mb=wn * n_per_worker * 4 / 2**20,
+           unpipelined_ms=us_unpipe / 1e3, pipelined_ms=us_pipe / 1e3,
+           pallas_interpret_ms=us_kernel / 1e3,
+           wall_speedup=us_unpipe / us_pipe,
+           sweep_units_int8=sc["pipelined_bytes"],
+           sweep_units_f32=sc["pipelined_bytes_f32"],
+           wire_bytes=wb["wire_bytes_int8"],
+           parity_partial_mode_x_wire=True, **wb, **sc)
+
 
 def kernel_vs_ref_block_rows():
     """block_rows sweep of the resident kernel (ROADMAP 'autotune
@@ -475,7 +630,8 @@ def kernel_vs_ref_block_rows():
     Sweep values come from ``--block-rows`` (benchmarks.run), default
     32,64,128,256."""
     wn = 4
-    nw = 1 << 18    # 1 MiB f32 per worker: keeps the interpreter sweep fast
+    # 1 MiB f32 per worker: keeps the interpreter sweep fast
+    nw = _sz(1 << 18, 1 << 15)
     rows_total = nw // LANE
     acfg = ASGDConfig(eps=0.05)
     kw = jax.random.split(jax.random.key(4), 2)

@@ -80,7 +80,11 @@ def _packed_state_to_tree(state, spec):
     everything else passes through.  An int8-wire buffer
     (PackedGossipState.buf_scales is not None) is DEQUANTIZED first — the
     canonical checkpoint stores float values and the quantization scales
-    are transient, never written to disk."""
+    are transient, never written to disk.  A stacked staleness FIFO
+    (delay >= 2 / pipelined engines, buf (D, W, R, LANE)) canonicalizes
+    slot by slot to a LIST of pytrees, oldest first — such checkpoints
+    interoperate between packed runs of the same depth; the single-slot
+    layout keeps the historical packed/unpacked file interop."""
     from ..core.gossip import GossipState
     from ..core.packing import dequantize_rows, unpack_w
 
@@ -90,8 +94,11 @@ def _packed_state_to_tree(state, spec):
     buf = g.buf
     if g.buf_scales is not None:
         buf = dequantize_rows(buf, g.buf_scales, spec.block_rows)
-    out["gossip"] = GossipState(buf=unpack_w(buf, spec),
-                                buf_idx=g.buf_idx, step=g.step)
+    if buf.ndim == 4:   # stacked FIFO: one canonical tree per slot
+        canon = [unpack_w(buf[d], spec) for d in range(buf.shape[0])]
+    else:
+        canon = unpack_w(buf, spec)
+    out["gossip"] = GossipState(buf=canon, buf_idx=g.buf_idx, step=g.step)
     return out
 
 
@@ -104,6 +111,16 @@ def save_checkpoint_packed(path, state, spec) -> None:
     buffered partition), so runs can switch layouts across restarts.
     Note the canonicalization rounds resident f32 values to the params'
     storage dtype — the same rounding every unpacked round performs.
+
+    Scope of the cross-layout guarantee: params and the gossip buffer are
+    canonicalized; optimizer state passes through in whatever layout the
+    run carried.  Stateless sgd (the paper-faithful inner) is
+    layout-free; a PIPELINED run with inner='momentum'/'adam' carries
+    packed-shaped moments (the gradient is born packed, DESIGN.md §7),
+    so such checkpoints restore only into pipelined runs — a mismatched
+    restore fails loudly on the opt leaves' shapes.  (Canonicalizing f32
+    moments through the bf16 param layout would silently round them,
+    which is worse than refusing.)
     """
     save_checkpoint(path, _packed_state_to_tree(state, spec))
 
@@ -123,7 +140,10 @@ def load_checkpoint_packed(path, like_state, spec):
     out = dict(tree)
     out["params"] = pack_w(tree["params"], spec)
     g = tree["gossip"]
-    buf = pack_w(g.buf, spec)
+    if isinstance(g.buf, list):   # stacked FIFO (oldest slot first)
+        buf = jnp.stack([pack_w(slot, spec) for slot in g.buf])
+    else:
+        buf = pack_w(g.buf, spec)
     like_g = like_state["gossip"]
     if getattr(like_g, "buf_scales", None) is not None:
         q, scales = quantize_rows(buf, spec.block_rows)

@@ -467,20 +467,39 @@ def asgd_gossip_apply(params, grads, state: GossipState, key,
         gossip_branch, silent_branch, (params, grads, state))
 
 
-def staleness_valid(step, cfg: GossipConfig):
-    """Round-1 staleness guard: with delay > 0 the buffer blended on the
-    FIRST round (step == 0) is the zero-initialized init_gossip_state
-    placeholder, not a received block — gate it out explicitly (f32 0/1
-    multiplier on the admission gates) instead of relying on the Parzen
-    gate's eq.-3 zero-detection, which conflates 'no message yet' with a
-    legitimately all-zero (or garbage-restored) state.  Returns None when
-    every external is valid (delay == 0: the just-received block is always
-    real).  The single source of the guard condition — shared by the
-    pytree engines, the packed GSPMD engine, and the shard_map
-    manual-region round (launch/mesh.py)."""
-    if cfg.delay == 0:
+def staleness_valid(step, cfg: GossipConfig, *, extra: int = 0,
+                    depth: int | None = None):
+    """Warm-up staleness guard: with staleness depth D, the external
+    blended on the first D rounds (step < D) is a zero-initialized
+    placeholder slot, not a received block — gate it out explicitly
+    (f32 0/1 multiplier on the admission gates) instead of relying on the
+    Parzen gate's eq.-3 zero-detection, which conflates 'no message yet'
+    with a legitimately all-zero (or garbage-restored) state.
+
+    D defaults to ``cfg.delay + extra``; ``extra`` is the pipelined
+    engines' mandatory in-flight round (DESIGN.md §7: the consumed
+    payload was launched delay+1 rounds ago), and deeper unpipelined
+    FIFOs (delay >= 2) are covered by the same ``step >= D`` condition.
+    ``depth`` overrides D outright: engines whose buffer is SHALLOWER
+    than cfg.delay claims must pass their real buffered depth — the
+    single-slot pytree engines (and the single-slot reference/manual
+    rounds) clamp to 1, else rounds that DID receive a real payload
+    would be gated out.
+
+    Interval gossip: buffer pushes happen only on gossip rounds (every
+    ``gossip_every``-th step), so the D-th PUSH completes at step
+    ``D * gossip_every`` — the guard threshold scales accordingly (a
+    plain ``step >= D`` would declare the FIFO head real while it still
+    holds an init placeholder).  Returns None when every external is
+    valid (D == 0: the just-received block is always real).  The single
+    source of the guard condition — shared by the pytree engines, the
+    packed GSPMD engines, and the shard_map manual-region rounds
+    (launch/mesh.py)."""
+    if depth is None:
+        depth = cfg.delay + extra
+    if depth == 0:
         return None
-    return (step > 0).astype(jnp.float32)
+    return (step >= depth * max(1, cfg.gossip_every)).astype(jnp.float32)
 
 
 def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None,
@@ -525,8 +544,11 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
     if cfg.delay == 0:
         ext, ext_idx, valid = sent, block_idx, None
     else:
+        # single-slot buffer: the effective staleness is 1 round whatever
+        # cfg.delay claims, so the guard clamps to depth 1 (delay >= 2
+        # FIFOs exist only on the packed engines)
         ext, ext_idx = state.buf, state.buf_idx
-        valid = staleness_valid(state.step, cfg)
+        valid = staleness_valid(state.step, cfg, depth=1)
 
     if acfg.use_fused:
         new_params, gate = _fused_blend(
@@ -562,8 +584,9 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
     if cfg.delay == 0:
         ext, ext_idx, valid = sent, block_idx, None
     else:
+        # single-slot buffer -> guard depth 1 (see _apply_leaves)
         ext, ext_idx = state.buf, state.buf_idx
-        valid = staleness_valid(state.step, cfg)
+        valid = staleness_valid(state.step, cfg, depth=1)
 
     local_blk = slice_rows(params, ext_idx, p)
     grads_blk = slice_rows(grads, ext_idx, p)
@@ -601,12 +624,15 @@ class PackedGossipState:
       packed analogue of GossipState.buf in 'leaves' mode).  Carrier f32
       normally; int8 under wire_format="int8" (the received block stays
       QUANTIZED until the kernel dequantizes it in-register — it never
-      materializes in float in HBM).
+      materializes in float in HBM).  With a staleness FIFO deeper than
+      one slot (delay >= 2, or any pipelined engine state — DESIGN.md §7)
+      buf is stacked (D, W, R, LANE), oldest payload first.
     buf_scales: per-block_rows f32 dequantization scales
-      (W, R // block_rows) matching buf when wire_format="int8"; None
-      otherwise.  Transient — never checkpointed (checkpoint/ canonicalizes
-      buf to the dequantized pytree layout).
-    buf_idx: which partition index buf holds.
+      (W, R // block_rows) matching buf when wire_format="int8"
+      ((D, W, R // block_rows) stacked); None otherwise.  Transient —
+      never checkpointed (checkpoint/ canonicalizes buf to the
+      dequantized pytree layout).
+    buf_idx: which partition index buf holds ((D,) stacked).
     step: round counter.
     """
 
@@ -623,15 +649,36 @@ class PackedGossipState:
         return cls(*children)
 
 
+def fifo_depth(cfg: GossipConfig, *, pipelined: bool = False) -> int:
+    """Staleness-FIFO depth of the packed engines (static).
+
+    Unpipelined: the engine carries the last ``delay`` launched payloads
+    (one unstacked slot historically; delay >= 2 stacks them).  Pipelined
+    (DESIGN.md §7): one extra slot for the mandatory in-flight round —
+    the consumed payload was launched ``delay + 1`` rounds ago.  Depth 1
+    keeps the exact single-slot PackedGossipState layout of PR 3/4;
+    deeper FIFOs stack a leading depth axis on buf/buf_scales/buf_idx."""
+    return max(1, cfg.delay + (1 if pipelined else 0))
+
+
 def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
-                             block_rows: int | None = None
+                             block_rows: int | None = None,
+                             depth: int | None = None
                              ) -> PackedGossipState:
     """Zero packed staleness buffer (paper eq. 3: all-zero == 'no message
-    yet' — exact on packed rows: padding is zero too; round 1 is
-    additionally gated by the explicit step == 0 staleness guard in
-    asgd_gossip_apply_packed).  With cfg resolving to wire_format="int8"
+    yet' — exact on packed rows: padding is zero too; the first ``depth``
+    rounds are additionally gated by the explicit step-based staleness
+    guard in the engines).  With cfg resolving to wire_format="int8"
     (pass the spec's block_rows too) the buffer is int8 zeros plus zero
-    scales — the quantized form of 'no message'."""
+    scales — the quantized form of 'no message'.
+
+    depth: staleness-FIFO slots (default ``fifo_depth(cfg)``): 1 keeps
+    the single-slot layout; >= 2 stacks buf (D, W, R, LANE),
+    buf_idx (D,), buf_scales (D, W, nb) — oldest payload first."""
+    if depth is None:
+        depth = fifo_depth(cfg) if cfg is not None else 1
+    lead = () if depth == 1 else (depth,)
+    idx = jnp.zeros(lead, jnp.int32) if lead else jnp.int32(0)
     if cfg is not None and resolved_wire_format(cfg) == "int8":
         if block_rows is None:
             raise ValueError(
@@ -640,11 +687,60 @@ def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
         from .packing import scale_blocks
         nb = scale_blocks(packed.shape[1], block_rows)
         return PackedGossipState(
-            buf=jnp.zeros(packed.shape, jnp.int8),
-            buf_scales=jnp.zeros((packed.shape[0], nb), jnp.float32),
-            buf_idx=jnp.int32(0), step=jnp.int32(0))
-    return PackedGossipState(buf=jnp.zeros_like(packed),
-                             buf_idx=jnp.int32(0), step=jnp.int32(0))
+            buf=jnp.zeros(lead + packed.shape, jnp.int8),
+            buf_scales=jnp.zeros(lead + (packed.shape[0], nb), jnp.float32),
+            buf_idx=idx, step=jnp.int32(0))
+    return PackedGossipState(buf=jnp.zeros(lead + packed.shape,
+                                           packed.dtype),
+                             buf_idx=idx, step=jnp.int32(0))
+
+
+def init_pipelined_gossip_state(packed, cfg: GossipConfig,
+                                block_rows: int | None = None
+                                ) -> PackedGossipState:
+    """Staleness FIFO for the pipelined engine (DESIGN.md §7): depth
+    ``cfg.delay + 1`` — the in-flight payload plus ``delay`` buffered
+    rounds."""
+    return init_packed_gossip_state(
+        packed, cfg, block_rows=block_rows,
+        depth=fifo_depth(cfg, pipelined=True))
+
+
+def _fifo_head(state: PackedGossipState, stacked: bool):
+    """(ext, ext_scales, ext_idx) — the OLDEST buffered payload."""
+    if not stacked:
+        return state.buf, state.buf_scales, state.buf_idx
+    scales = None if state.buf_scales is None else state.buf_scales[0]
+    return state.buf[0], scales, state.buf_idx[0]
+
+
+def _silent_round(packed, pgrads, state: PackedGossipState, step_lr):
+    """Shared silent-round body of the packed engines (ASGDConfig.silent
+    and the gossip_every off-rounds): plain local SGD step, buffers
+    untouched, step bumped, zero gate metrics — ONE implementation so the
+    engines the parity tests compare cannot drift."""
+    new_state = PackedGossipState(buf=state.buf, buf_scales=state.buf_scales,
+                                  buf_idx=state.buf_idx, step=state.step + 1)
+    zero = jnp.zeros((packed.shape[0],), jnp.float32)
+    return packed - step_lr * pgrads, new_state, {
+        "gate": zero, "n_good": jnp.float32(0.0)}
+
+
+def _fifo_push(state: PackedGossipState, sent, sent_scales, block_idx,
+               stacked: bool) -> PackedGossipState:
+    """Drop the oldest payload, append the just-launched one, bump step."""
+    if not stacked:
+        return PackedGossipState(buf=sent, buf_scales=sent_scales,
+                                 buf_idx=block_idx, step=state.step + 1)
+    buf = jnp.concatenate([state.buf[1:], sent[None]], axis=0)
+    idx = jnp.concatenate(
+        [state.buf_idx[1:], jnp.asarray(block_idx, jnp.int32)[None]])
+    scales = None
+    if sent_scales is not None:
+        scales = jnp.concatenate([state.buf_scales[1:], sent_scales[None]],
+                                 axis=0)
+    return PackedGossipState(buf=buf, buf_scales=scales, buf_idx=idx,
+                             step=state.step + 1)
 
 
 def packed_row_ranges(spec, cfg: GossipConfig) -> tuple:
@@ -779,9 +875,13 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
     With wire_format="int8" the exchanged slice travels (and is buffered)
     as int8 + per-block_rows f32 scales; both kernel passes dequantize
     in-register, so the external never exists in float in HBM and the
-    collective moves |w|/(4p) bytes.  Round 1 with delay > 0 is closed by
-    the explicit step == 0 staleness guard (the init buffer is a
-    placeholder, not a received block).
+    collective moves |w|/(4p) bytes.  The first ``delay`` rounds are
+    closed by the explicit step-based staleness guard (the init buffer
+    slots are placeholders, not received blocks).  delay >= 2 carries a
+    stacked payload FIFO (init_packed_gossip_state depth) and blends the
+    payload launched ``delay`` rounds ago — deeper paper-tolerated
+    staleness, and the parity oracle for the pipelined engine run at
+    ``delay - 1`` (DESIGN.md §7).
 
     Args:
       packed: (W, R, LANE) f32 resident ensemble.
@@ -795,15 +895,12 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
     Returns (new_packed, new_state, metrics) with the same metrics contract
     as asgd_gossip_apply.
     """
-    W = packed.shape[0]
     if acfg.silent:
-        state = PackedGossipState(buf=state.buf, buf_scales=state.buf_scales,
-                                  buf_idx=state.buf_idx, step=state.step + 1)
-        return packed - acfg.eps * pgrads, state, {
-            "gate": jnp.zeros((W,), jnp.float32), "n_good": jnp.float32(0.0)}
+        return _silent_round(packed, pgrads, state, acfg.eps)
 
     p = cfg.partial_blocks
     wire = resolved_wire_format(cfg)
+    stacked = fifo_depth(cfg) >= 2
     k_shift, k_blk = jax.random.split(key)
     shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
     block_idx = jax.random.randint(k_blk, (), 0, p)
@@ -825,8 +922,9 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
             ext, ext_scales, ext_idx = sent, sent_scales, block_idx
             valid = None
         else:
-            ext, ext_scales = state.buf, state.buf_scales
-            ext_idx = state.buf_idx
+            # delay >= 2 pops the FIFO head (the payload launched ``delay``
+            # rounds ago); delay == 1 keeps the historical single slot
+            ext, ext_scales, ext_idx = _fifo_head(state, stacked)
             valid = staleness_valid(state.step, cfg)
         row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
         new_packed, gates = gossip_blend_w_resident(
@@ -836,9 +934,8 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
             elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
             psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
         gate = gates[:, 0]
-        new_state = PackedGossipState(buf=sent, buf_scales=sent_scales,
-                                      buf_idx=block_idx,
-                                      step=state.step + 1)
+        new_state = _fifo_push(state, sent, sent_scales, block_idx,
+                               stacked)
         return new_packed, new_state, {"gate": gate,
                                        "n_good": jnp.sum(gate)}
 
@@ -847,13 +944,116 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
 
     def silent_branch(args):
         packed, pgrads, state = args
-        new_state = PackedGossipState(buf=state.buf,
-                                      buf_scales=state.buf_scales,
-                                      buf_idx=state.buf_idx,
-                                      step=state.step + 1)
-        zero = jnp.zeros((W,), jnp.float32)
-        return packed - acfg.eps * pgrads, new_state, {
-            "gate": zero, "n_good": jnp.float32(0.0)}
+        return _silent_round(packed, pgrads, state, acfg.eps)
+
+    return jax.lax.cond(
+        state.step % cfg.gossip_every == 0,
+        gossip_branch, silent_branch, (packed, pgrads, state))
+
+
+# ---------------------------------------------------------------------------
+# pipelined rounds (DESIGN.md §7): the exchange is split off the blend —
+# round t LAUNCHES its payload from the pre-blend ensemble (the collective
+# overlaps the forward/backward) and BLENDS the payload launched delay+1
+# rounds ago (the FIFO head).  Bit-identical to the unpipelined engine run
+# at delay+1: same key schedule, same exchange, same kernel.
+# ---------------------------------------------------------------------------
+
+def initiate_exchange_packed(packed, key, cfg: GossipConfig, spec):
+    """The INITIATE half of the pipelined round: draw this round's
+    (shift, partition) pair and launch the payload from the CURRENT
+    (pre-blend) ensemble.
+
+    ``packed`` is the train-step program's input, so the ppermute this
+    lowers to depends on nothing computed this round — issued before the
+    forward/backward (launch/steps.py pipelined step), the collective runs
+    concurrently with the compute and its product is consumed only by the
+    NEXT round's blend.  Returns (sent, sent_scales, block_idx);
+    sent_scales is None except under wire_format="int8"."""
+    k_shift, k_blk = jax.random.split(key)
+    shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
+    block_idx = jax.random.randint(k_blk, (), 0, cfg.partial_blocks)
+    ranges = packed_row_ranges(spec, cfg)
+    if resolved_wire_format(cfg) == "int8":
+        sent, sent_scales = exchange_packed(
+            packed, ranges, shift_idx, block_idx, cfg,
+            block_rows=spec.block_rows)
+    else:
+        sent = exchange_packed(packed, ranges, shift_idx, block_idx, cfg)
+        sent_scales = None
+    return sent, sent_scales, block_idx
+
+
+def consume_exchange_packed(packed, pgrads, state: PackedGossipState, sent,
+                            sent_scales, block_idx, cfg: GossipConfig,
+                            acfg: ASGDConfig, spec, lr=None):
+    """The CONSUME half of the pipelined round: blend the FIFO head — the
+    payload launched ``cfg.delay + 1`` rounds ago — with the eq.-1 local
+    update fused in-register (the resident kernel's runtime ``lr``
+    operand, default acfg.eps), then push the just-launched payload.
+
+    The blend never touches ``sent`` (this round's launch), so the
+    collective that produced it sits entirely off the blend's critical
+    path.  The first delay+1 rounds blend placeholder slots and are closed
+    by the staleness guard (staleness_valid extra=1).  Returns
+    (new_packed, new_state, metrics) with the engine metrics contract."""
+    from ..kernels.gossip_blend import gossip_blend_w_resident
+
+    stacked = fifo_depth(cfg, pipelined=True) >= 2
+    ext, ext_scales, ext_idx = _fifo_head(state, stacked)
+    valid = staleness_valid(state.step, cfg, extra=1)
+    ranges = packed_row_ranges(spec, cfg)
+    row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
+    new_packed, gates = gossip_blend_w_resident(
+        packed, pgrads, ext[:, None], row_range, acfg.eps, lr=lr,
+        ext_scales=None if ext_scales is None else ext_scales[:, None],
+        use_parzen=acfg.use_parzen, elastic=acfg.elastic,
+        elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
+        psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+    gate = gates[:, 0]
+    new_state = _fifo_push(state, sent, sent_scales, block_idx, stacked)
+    return new_packed, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
+
+
+def asgd_gossip_apply_pipelined(packed, pgrads, state: PackedGossipState,
+                                key, cfg: GossipConfig, acfg: ASGDConfig,
+                                spec, lr=None):
+    """One PIPELINED packed-resident ASGD round (DESIGN.md §7).
+
+    initiate_exchange_packed + consume_exchange_packed composed — the
+    in-jit GSPMD formulation of the pipelined round, for callers without
+    a model in the loop (tests, benchmarks, the manual-region parity
+    suite).  The train step (launch/steps.py make_train_step(
+    pipelined=True)) calls the two halves around the forward/backward
+    instead, so the payload collective overlaps the compute.
+
+    Effective staleness is ``cfg.delay + 1`` (the mandatory in-flight
+    round plus cfg.delay buffered rounds): bit-identical to
+    asgd_gossip_apply_packed run at ``delay + 1`` on the same key
+    schedule (the acceptance driver is
+    kernels/gossip_blend/ref.py run_pipelined_parity).  ``state`` comes
+    from init_pipelined_gossip_state.  ``lr`` optionally overrides the
+    fused eq.-1 step size (a traced schedule value; the Parzen gate keeps
+    acfg.eps).
+    """
+    step_lr = acfg.eps if lr is None else lr
+    if acfg.silent:
+        return _silent_round(packed, pgrads, state, step_lr)
+
+    def gossip_branch(args):
+        packed, pgrads, state = args
+        sent, sent_scales, block_idx = initiate_exchange_packed(
+            packed, key, cfg, spec)
+        return consume_exchange_packed(packed, pgrads, state, sent,
+                                       sent_scales, block_idx, cfg, acfg,
+                                       spec, lr=lr)
+
+    if cfg.gossip_every <= 1:
+        return gossip_branch((packed, pgrads, state))
+
+    def silent_branch(args):
+        packed, pgrads, state = args
+        return _silent_round(packed, pgrads, state, step_lr)
 
     return jax.lax.cond(
         state.step % cfg.gossip_every == 0,

@@ -216,6 +216,39 @@ def pack_w(tree, spec: WPackSpec):
     return flat.reshape(wn, spec.rows, LANE)
 
 
+def unpack_rows(arr2d, spec: WPackSpec):
+    """Unpack ONE worker's ``(rows, LANE)`` slice of the worker-batched
+    layout to the per-worker pytree (tail shapes, original dtypes).
+
+    The per-worker form of :func:`unpack_w`, designed to sit under
+    ``jax.vmap`` in the pipelined packed-resident train step
+    (DESIGN.md §7): differentiating the loss THROUGH this view with
+    respect to the packed slice yields the gradient already in the packed
+    layout — the VJP of slice+reshape+cast is exactly what ``pack_w``
+    computes (bit-for-bit, including zero cotangents in the padding) — so
+    the per-round ``pack_w(grads)`` full-state copy disappears from the
+    round's HBM accounting."""
+    flat = arr2d.reshape(-1)
+
+    def take(off, i):
+        return (flat[off:off + spec.sizes[i]]
+                .reshape(spec.shapes[i]).astype(spec.dtypes[i]))
+
+    out = [None] * len(spec.sizes)
+    if spec.group_leaves is None:
+        off = 0
+        for i in range(len(spec.sizes)):
+            out[i] = take(off, i)
+            off += spec.sizes[i]
+    else:
+        for idxs, (r0, _) in zip(spec.group_leaves, spec.group_row_ranges):
+            off = r0 * LANE
+            for i in idxs:
+                out[i] = take(off, i)
+                off += spec.sizes[i]
+    return jax.tree.unflatten(spec.treedef, out)
+
+
 def unpack_w(arr3d, spec: WPackSpec):
     """Inverse of :func:`pack_w`: restore (W, ...) shapes and dtypes."""
     wn = spec.n_workers

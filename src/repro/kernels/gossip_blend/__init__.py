@@ -1,3 +1,3 @@
-from .ops import (gossip_blend, gossip_blend_packed, gossip_blend_w,
-                  gossip_blend_w_resident, gossip_blend_worker_batched,
-                  gossip_gates)
+from .ops import (choose_block_rows, gossip_blend, gossip_blend_packed,
+                  gossip_blend_w, gossip_blend_w_resident,
+                  gossip_blend_worker_batched, gossip_gates)

@@ -55,6 +55,14 @@ grid block — the quantization tile equals the kernel row block by
 construction).  Dequantization (``q.astype(f32) * scale``) is fused into
 BOTH passes in-register, so the received block never materializes in
 float in HBM and the ext read costs 1/4 of the f32 bytes.
+
+Fused eq.-1 update (DESIGN.md §7): the resident apply pass takes the
+eq.-1 step size ``lr`` as a RUNTIME f32 operand (one scalar for the whole
+grid) and applies the local update ``w - lr*dw`` in-register in the same
+sweep as the gated mean — the SGD update is never a separate full-state
+traversal, and a traced lr schedule never forces a kernel recompile.  The
+Parzen threshold keeps its own ``eps`` (evaluated on the tiny (W, P, 3)
+accumulator in the wrapper, outside the kernel).
 """
 from __future__ import annotations
 
@@ -326,13 +334,14 @@ def _reduce_w_resident_kernel(*refs, block_rows, has_scales):
     acc_ref[0, :, 2] += sq_dw   # replicated across P rows (read row 0)
 
 
-def _apply_w_resident_kernel(*refs, eps, elastic, elastic_alpha, block_rows,
+def _apply_w_resident_kernel(*refs, elastic, elastic_alpha, block_rows,
                              has_scales):
     if has_scales:
         (rr_ref, w_ref, dw_ref, ext_ref, scales_ref, gates_ref, inv_ref,
-         out_ref) = refs
+         lr_ref, out_ref) = refs
     else:
-        rr_ref, w_ref, dw_ref, ext_ref, gates_ref, inv_ref, out_ref = refs
+        (rr_ref, w_ref, dw_ref, ext_ref, gates_ref, inv_ref, lr_ref,
+         out_ref) = refs
     i = pl.program_id(1)
     m = _row_range_mask(rr_ref, i, block_rows)
     w = w_ref[...][0].astype(jnp.float32)            # (br, LANE)
@@ -342,14 +351,18 @@ def _apply_w_resident_kernel(*refs, eps, elastic, elastic_alpha, block_rows,
         ext = ext * scales_ref[...][0, :, 0][:, None, None]
     g = gates_ref[...][0]                            # (P,)
     inv_denom = inv_ref[...][0, 0]
+    # lr is a RUNTIME operand (one f32 scalar shared by the whole grid):
+    # the eq.-1 local update w - lr*dw is applied in-register in the same
+    # sweep as the blend, and an lr schedule never forces a recompile
+    lr = lr_ref[...][0, 0]
     mean = inv_denom * (w + jnp.sum(g[:, None, None] * ext, axis=0))
     # off-partition positions take the plain SGD step (the attraction is
     # defined only on the exchanged row range)
     attraction = (w - mean) * m
     if elastic:
-        out = (w - eps * dw) - elastic_alpha * attraction
+        out = (w - lr * dw) - elastic_alpha * attraction
     else:
-        out = w - eps * (attraction + dw)
+        out = w - lr * (attraction + dw)
     out_ref[...] = out[None].astype(out_ref.dtype)
 
 
@@ -395,15 +408,18 @@ def gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "eps", "elastic", "elastic_alpha", "block_rows", "interpret"))
+    "elastic", "elastic_alpha", "block_rows", "interpret"))
 def gossip_apply_w_resident_pallas(row_range, w3d, dw3d, ext4d, gates,
-                                   inv_denom, ext_scales=None, *, eps,
+                                   inv_denom, lr, ext_scales=None, *,
                                    elastic=False, elastic_alpha=0.5,
                                    block_rows=64, interpret=None):
-    """Packed-resident pass 2: per-worker gated mean + step, attraction
-    restricted to the prefetched [row_start, row_end) partition; positions
-    outside take the plain SGD step.  ext4d may be int8 with ext_scales
-    (W, P, R // block_rows) — the dequantization is fused, as in pass 1.
+    """Packed-resident pass 2: per-worker gated mean + fused eq.-1 step,
+    attraction restricted to the prefetched [row_start, row_end) partition;
+    positions outside take the plain SGD step.  ``lr`` is a RUNTIME f32
+    scalar (the eq.-1 step size — traced, so lr schedules never recompile
+    the kernel; the Parzen gate's eps lives in pass 1's wrapper).  ext4d
+    may be int8 with ext_scales (W, P, R // block_rows) — the
+    dequantization is fused, as in pass 1.
     Returns the updated (W, R, LANE) states."""
     wn, r = w3d.shape[:2]
     p = ext4d.shape[1]
@@ -420,8 +436,10 @@ def gossip_apply_w_resident_pallas(row_range, w3d, dw3d, ext4d, gates,
     in_specs += [
         pl.BlockSpec((1, p), lambda wi, i, rr: (wi, 0)),
         pl.BlockSpec((1, 1), lambda wi, i, rr: (wi, 0)),
+        pl.BlockSpec((1, 1), lambda wi, i, rr: (0, 0)),
     ]
-    operands += [gates, jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1)]
+    operands += [gates, jnp.asarray(inv_denom, jnp.float32).reshape(wn, 1),
+                 jnp.asarray(lr, jnp.float32).reshape(1, 1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(wn, r // block_rows),
@@ -429,7 +447,7 @@ def gossip_apply_w_resident_pallas(row_range, w3d, dw3d, ext4d, gates,
         out_specs=spec_s,
     )
     return pl.pallas_call(
-        functools.partial(_apply_w_resident_kernel, eps=eps, elastic=elastic,
+        functools.partial(_apply_w_resident_kernel, elastic=elastic,
                           elastic_alpha=elastic_alpha, block_rows=block_rows,
                           has_scales=ext_scales is not None),
         grid_spec=grid_spec,

@@ -22,6 +22,11 @@ Entry points:
 """
 from __future__ import annotations
 
+import functools
+import json
+import math
+import pathlib
+
 import jax
 import jax.numpy as jnp
 
@@ -30,6 +35,81 @@ from repro.core.parzen import gate_from_terms
 from .kernel import (LANE, gossip_apply_pallas, gossip_apply_w_pallas,
                      gossip_apply_w_resident_pallas, gossip_reduce_pallas,
                      gossip_reduce_w_pallas, gossip_reduce_w_resident_pallas)
+
+# ---------------------------------------------------------------------------
+# block_rows autotune (ROADMAP 'autotune block_rows'): fit the per-block-size
+# kernel records of the benchmarks' block_rows sweep and use the winner as
+# the default when a resident-kernel caller passes block_rows=None
+# ---------------------------------------------------------------------------
+
+# repo root (src/repro/kernels/gossip_blend -> 4 levels up) — where
+# benchmarks/run.py writes the trajectory file
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[4] / \
+    "BENCH_gossip_blend.json"
+_DEFAULT_BLOCK_ROWS = 64
+
+
+@functools.lru_cache(maxsize=None)
+def _block_rows_ranking(bench_path: str, wire_format) -> tuple:
+    """block_rows candidates from the ``block_rows_sweep`` records, best
+    first.  The fit: per block size, the geometric mean of the measured
+    per-call times across the selected wire format(s) — f32 and int8
+    records both count unless ``wire_format`` filters to one — so one
+    ranking covers both wire paths.
+
+    Only TPU-measured artifacts rank (``payload["backend"] == "tpu"``):
+    CPU records time the Pallas INTERPRETER, which is monotone in grid
+    block count and would deterministically crown the largest block size
+    regardless of real HBM behavior.  () when the file/records are
+    missing or the backend is not a TPU (callers fall back to the
+    historical default)."""
+    try:
+        payload = json.loads(pathlib.Path(bench_path).read_text())
+    except (OSError, ValueError):
+        return ()
+    if payload.get("backend") != "tpu":
+        return ()
+    by_br: dict = {}
+    for r in payload.get("records", ()):
+        if r.get("name") != "block_rows_sweep":
+            continue
+        if wire_format is not None and r.get("wire_format") != wire_format:
+            continue
+        ms = r.get("pallas_interpret_ms")
+        if ms is None or ms <= 0:
+            continue
+        by_br.setdefault(int(r["block_rows"]), []).append(float(ms))
+
+    def geomean(v):
+        return math.exp(sum(math.log(x) for x in v) / len(v))
+
+    return tuple(sorted(by_br, key=lambda br: geomean(by_br[br])))
+
+
+def choose_block_rows(rows: int | None = None, *, wire_format=None,
+                      bench_path=None) -> int:
+    """Autotuned default ``block_rows`` for the resident gossip kernels.
+
+    Ranks the ``block_rows_sweep`` records of ``BENCH_gossip_blend.json``
+    (best measured time first; ``wire_format`` "f32"/"int8" restricts the
+    fit to one wire path, None pools both) and returns the best candidate
+    that divides ``rows`` (the kernel grid requires R % block_rows == 0).
+    With no usable bench records — file missing, artifact not
+    TPU-measured (see _block_rows_ranking), or no candidate divides —
+    falls back to the largest power-of-two divisor of ``rows`` up to the
+    historical default of 64.  Deterministic and cached per (path, format).
+    """
+    ranking = _block_rows_ranking(str(bench_path or _BENCH_PATH),
+                                  wire_format)
+    for br in ranking:
+        if rows is None or rows % br == 0:
+            return br
+    if rows is None:
+        return _DEFAULT_BLOCK_ROWS
+    br = _DEFAULT_BLOCK_ROWS
+    while br > 1 and rows % br:
+        br //= 2
+    return br
 
 
 def _to_2d(x, rows_mult):
@@ -151,10 +231,11 @@ def gossip_blend_worker_batched(w3d, dw3d, ext4d, eps, *, mask2d=None,
     return out, gates
 
 
-def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
+def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *, lr=None,
                             ext_scales=None, use_parzen: bool = True,
                             elastic: bool = False,
-                            elastic_alpha: float = 0.5, block_rows: int = 64,
+                            elastic_alpha: float = 0.5,
+                            block_rows: int | None = None,
                             interpret=None, psum_axes=None, gate_scale=None):
     """Packed-resident fused ASGD update for W local worker replicas.
 
@@ -167,19 +248,38 @@ def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
     array is built or read.  Row ranges may be empty (r0 == r1): every gate
     is then closed and the update degrades to the plain SGD step.
 
+    lr: optional eq.-1 step size for the fused in-register update
+    ``w - lr*(attraction + dw)`` — a RUNTIME scalar (Python float or
+    traced, e.g. a live schedule value; never a recompile).  Defaults to
+    ``eps``, the paper's single ε; the Parzen admission threshold always
+    uses ``eps``.
+
     ext_scales: optional (W, P, R // block_rows) f32 — the int8 wire
     (GossipConfig.wire_format="int8", core/packing.py quantize_rows):
     ext4d is then int8 and both passes dequantize in-register, reading a
     quarter of the external's f32 bytes.  gate_scale: optional scalar or
     (W,) validity multiplier on the gates (round-1 staleness guard).
 
+    block_rows: kernel row-block size; None (default) resolves through
+    :func:`choose_block_rows` — the autotuned fit of the benchmark
+    block_rows sweep — except under the int8 wire, where the quantization
+    tile fixes it exactly (R // ext_scales.shape[-1]).
+
     Returns (w_next (W, R, LANE), gates (W, P) f32); two HBM passes over
     the worker-stacked state reading exactly w+dw+ext each.
     """
-    wn = w3d.shape[0]
+    wn, r = w3d.shape[:2]
     p = ext4d.shape[1]
+    if lr is None:
+        lr = eps
+    if block_rows is None:
+        if ext_scales is not None:
+            # the quantization tile IS the kernel row block by construction
+            block_rows = r // ext_scales.shape[-1]
+        else:
+            block_rows = choose_block_rows(r, wire_format="f32")
     if p == 0:
-        return w3d - eps * dw3d, jnp.zeros((wn, 0), jnp.float32)
+        return w3d - lr * dw3d, jnp.zeros((wn, 0), jnp.float32)
     acc = gossip_reduce_w_resident_pallas(row_range, w3d, dw3d, ext4d,
                                           ext_scales,
                                           block_rows=block_rows,
@@ -190,8 +290,8 @@ def gossip_blend_w_resident(w3d, dw3d, ext4d, row_range, eps, *,
                          gate_scale)
     inv_denom = 1.0 / (jnp.sum(gates, axis=1) + 1.0)
     out = gossip_apply_w_resident_pallas(
-        row_range, w3d, dw3d, ext4d, gates, inv_denom, ext_scales,
-        eps=float(eps), elastic=elastic, elastic_alpha=float(elastic_alpha),
+        row_range, w3d, dw3d, ext4d, gates, inv_denom, lr, ext_scales,
+        elastic=elastic, elastic_alpha=float(elastic_alpha),
         block_rows=block_rows, interpret=interpret)
     return out, gates
 

@@ -122,7 +122,7 @@ def gossip_blend_w_ref(w, exts, dw, eps, *, mask=None, use_parzen: bool = True,
 
 
 def gossip_blend_w_resident_ref(w3d, dw3d, ext4d, row_range, eps, *,
-                                ext_scales=None, block_rows=64,
+                                lr=None, ext_scales=None, block_rows=64,
                                 use_parzen: bool = True,
                                 elastic: bool = False,
                                 elastic_alpha: float = 0.5):
@@ -133,7 +133,9 @@ def gossip_blend_w_resident_ref(w3d, dw3d, ext4d, row_range, eps, *,
     dequantized through core.packing.dequantize_rows, the BIT-IDENTICAL
     jnp form of the kernel's fused in-register dequantization (same
     q.astype(f32) * scale per element).  row_range: (2,) int row window of
-    the exchanged partition.  Returns (w_next (W, R, LANE), gates (W, P)).
+    the exchanged partition.  ``lr`` mirrors the kernel's runtime fused
+    eq.-1 step-size operand (defaults to eps; the Parzen threshold always
+    uses eps).  Returns (w_next (W, R, LANE), gates (W, P)).
     This is the fake-quant reference path of the parity tests and the
     quantized_wire benchmark record.
     """
@@ -148,7 +150,7 @@ def gossip_blend_w_resident_ref(w3d, dw3d, ext4d, row_range, eps, *,
         .astype(jnp.float32)[:, None], (r, lane)).reshape(-1)
     out, gates = gossip_blend_w_batched(
         w3d.reshape(wn, -1), ext4d.reshape(wn, ext4d.shape[1], -1),
-        dw3d.reshape(wn, -1), eps, mask=mask, use_parzen=use_parzen,
+        dw3d.reshape(wn, -1), eps, lr=lr, mask=mask, use_parzen=use_parzen,
         elastic=elastic, elastic_alpha=elastic_alpha)
     return out.reshape(w3d.shape), gates
 
@@ -179,8 +181,11 @@ def quantized_round_reference(packed, pdw, buf_q, buf_s, buf_idx, step, key,
     if cfg.delay == 0:
         ext_q, ext_s, ext_idx, valid = sent_q, sent_s, block_idx, None
     else:
+        # this reference carries a SINGLE-slot buffer (last round's sent),
+        # so the guard clamps to depth 1 like the pytree engines
         ext_q, ext_s, ext_idx = buf_q, buf_s, buf_idx
-        valid = staleness_valid(jnp.asarray(step, jnp.int32), cfg)
+        valid = staleness_valid(jnp.asarray(step, jnp.int32), cfg,
+                                depth=1)
     rr = jnp.asarray(ranges, jnp.int32)[ext_idx]
     out, gates = gossip_blend_w_resident_ref(
         packed, pdw, ext_q[:, None], rr, acfg.eps,
@@ -238,15 +243,73 @@ def run_quantized_parity(params, grads, cfg, acfg, spec, rounds=3):
     return per_round, state
 
 
-def gossip_blend_w_batched(w, exts, dw, eps, *, mask=None,
+def run_pipelined_parity(params, grads, cfg, acfg, spec, rounds=4):
+    """Drive the PIPELINED packed-resident engine against the unpipelined
+    engine run at ``delay + 1``, side by side from a fresh init on the
+    SAME key schedule — the ISSUE-5 acceptance driver, shared by
+    tests/test_gossip_pipelined.py and the ``pipelined`` benchmark gate
+    (benchmarks/spmd_step.py) so the two assert the same thing.
+
+    The pipelined round launches round t's payload from the pre-blend
+    ensemble and blends the FIFO head (launched ``cfg.delay + 1`` rounds
+    ago), which is by construction the unpipelined engine's schedule at
+    ``delay + 1`` — states and gates must match bit-for-bit on the float
+    wire (the two engines run the identical kernel ops in the identical
+    order) and to f32 tolerance on the int8 wire.
+
+    Returns (per_round, pipe_state): per_round dicts carry
+    ``pipe_packed``/``ref_packed``/``pipe_gate``/``ref_gate``; pipe_state
+    is the pipelined engine's final PackedGossipState (FIFO depth
+    assertions).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.core.gossip import (asgd_gossip_apply_packed,
+                                   asgd_gossip_apply_pipelined,
+                                   init_packed_gossip_state,
+                                   init_pipelined_gossip_state,
+                                   resolved_wire_format)
+    from repro.core.packing import pack_w
+
+    ref_cfg = dataclasses.replace(cfg, delay=cfg.delay + 1)
+    block_rows = spec.block_rows \
+        if resolved_wire_format(cfg) == "int8" else None
+    packed = pack_w(params, spec)
+    pdw = pack_w(grads, spec)
+    pipe_state = init_pipelined_gossip_state(packed, cfg,
+                                             block_rows=block_rows)
+    ref_pk = packed
+    ref_state = init_packed_gossip_state(packed, ref_cfg,
+                                         block_rows=block_rows)
+    per_round = []
+    for i in range(rounds):
+        key = jax.random.key(i)
+        packed, pipe_state, m = asgd_gossip_apply_pipelined(
+            packed, pdw, pipe_state, key, cfg, acfg, spec)
+        ref_pk, ref_state, m_ref = asgd_gossip_apply_packed(
+            ref_pk, pdw, ref_state, key, ref_cfg, acfg, spec)
+        per_round.append({"pipe_packed": packed, "ref_packed": ref_pk,
+                          "pipe_gate": m["gate"],
+                          "ref_gate": m_ref["gate"]})
+    return per_round, pipe_state
+
+
+def gossip_blend_w_batched(w, exts, dw, eps, *, lr=None, mask=None,
                            use_parzen: bool = True, elastic: bool = False,
                            elastic_alpha: float = 0.5):
     """The worker-batched kernel's two-pass dataflow in jnp (einsum form).
 
     Same math as gossip_blend_w_ref via the expanded eq.-(4) identity — only
     (W, P) reductions over the stacked externals plus one elementwise pass.
-    The CPU/XLA stand-in for the worker-batched Pallas kernel in benchmarks.
+    ``lr`` is the fused eq.-1 step size (defaults to eps — the gate
+    threshold always uses eps), mirroring the resident kernel's runtime
+    operand.  The CPU/XLA stand-in for the worker-batched Pallas kernel in
+    benchmarks.
     """
+    if lr is None:
+        lr = eps
     w = w.astype(jnp.float32)
     dw = dw.astype(jnp.float32)
     exts = exts.astype(jnp.float32)
@@ -263,14 +326,14 @@ def gossip_blend_w_batched(w, exts, dw, eps, *, mask=None,
         gates = jnp.where(improves & nonempty, 1.0, 0.0)
     else:
         gates = jnp.where(nonempty, 1.0, 0.0)
-    # pass 2: per-worker gated mean + step
+    # pass 2: per-worker gated mean + fused eq.-1 step
     denom = jnp.sum(gates, axis=1) + 1.0
     mean = (w + jnp.einsum("wp,wpn->wn", gates, exts)) / denom[:, None]
     attraction = w - mean
     if mask is not None:
         attraction = attraction * mask
     if elastic:
-        w_next = (w - eps * dw) - elastic_alpha * attraction
+        w_next = (w - lr * dw) - elastic_alpha * attraction
     else:
-        w_next = w - eps * (attraction + dw)
+        w_next = w - lr * (attraction + dw)
     return w_next, gates

@@ -30,9 +30,10 @@ ARTIFACT_DIR = pathlib.Path(__file__).resolve().parents[3] / \
     "launch_artifacts"
 
 
-def _compile_and_cost(cfg, shape, mesh, gcfg, algo):
+def _compile_and_cost(cfg, shape, mesh, gcfg, algo, engine="pytree"):
     """(compiled, flops, bytes, collective_dict) for one model config."""
-    fn, specs = ST.step_and_args(cfg, shape, mesh, gcfg, algo=algo)
+    fn, specs = ST.step_and_args(cfg, shape, mesh, gcfg, algo=algo,
+                                 engine=engine)
     with mesh_context(mesh):
         lowered = jax.jit(fn).lower(*specs.values())
         compiled = lowered.compile()
@@ -47,8 +48,14 @@ def _compile_and_cost(cfg, shape, mesh, gcfg, algo):
 
 def run_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
              gcfg: GossipConfig | None = None, algo: str = "asgd",
-             verbose: bool = True) -> dict:
+             engine: str = "pytree", verbose: bool = True) -> dict:
     """Lower + compile one (arch, shape, mesh); return the roofline record.
+
+    engine ('pytree' | 'packed' | 'pipelined', train shapes only): which
+    train-step formulation to lower — 'packed'/'pipelined' compile the
+    resident-ensemble engines (DESIGN.md §6/§7) so their HLO cost and
+    collective bytes land in the roofline artifacts (the PR-3 follow-up:
+    resident HLO rooflines).  Serve shapes ignore the engine.
 
     Cost extraction: ``cost_analysis`` reports ONE device's program and does
     NOT multiply while-loop bodies by their trip count, so scanned layer
@@ -67,11 +74,13 @@ def run_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
     mesh_name = "2x16x16" if multi_pod else "16x16"
     chips = 512 if multi_pod else 256
     gcfg = gcfg or GossipConfig()
+    if shape.kind != "train":
+        engine = "pytree"   # serve steps have no gossip engine
 
     # --- full-depth compile: the lowering proof + memory analysis ----------
     t0 = time.time()
     compiled, _, _, coll_full = _compile_and_cost(
-        cfg, shape, mesh, gcfg, algo)
+        cfg, shape, mesh, gcfg, algo, engine)
     t_full = time.time() - t0
     try:
         mem = compiled.memory_analysis()
@@ -89,8 +98,8 @@ def run_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
     t1 = time.time()
     cfg1 = dc.replace(cfg, n_layers=c, unroll_scan=True)
     cfg2 = dc.replace(cfg, n_layers=2 * c, unroll_scan=True)
-    _, f1, b1, k1 = _compile_and_cost(cfg1, shape, mesh, gcfg, algo)
-    _, f2, b2, k2 = _compile_and_cost(cfg2, shape, mesh, gcfg, algo)
+    _, f1, b1, k1 = _compile_and_cost(cfg1, shape, mesh, gcfg, algo, engine)
+    _, f2, b2, k2 = _compile_and_cost(cfg2, shape, mesh, gcfg, algo, engine)
     t_shallow = time.time() - t1
     scale = cfg.n_layers / c
 
@@ -122,6 +131,7 @@ def run_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
     rec = terms.as_dict()
     rec.update({
         "algo": algo,
+        "engine": engine,
         "collective_by_op": coll_by_op,
         "collective_op_count_fulldepth": coll_full["count"],
         "memory": mem_rec,
@@ -130,7 +140,8 @@ def run_pair(arch_name: str, shape_name: str, *, multi_pod: bool,
     })
     if verbose:
         print(f"[dryrun] {arch_name} x {shape_name} x {mesh_name} "
-              f"({algo}): OK full={t_full:.0f}s shallow={t_shallow:.0f}s "
+              f"({algo}/{engine}): OK full={t_full:.0f}s "
+              f"shallow={t_shallow:.0f}s "
               f"dominant={rec['dominant']} useful={rec['useful_ratio']:.3f}",
               flush=True)
     return rec
@@ -144,6 +155,12 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--algo", default="asgd",
                     choices=["asgd", "silent", "sync"])
+    ap.add_argument("--engine", default="pytree",
+                    choices=list(ST.ENGINES),
+                    help="train-step formulation to lower: 'packed' / "
+                         "'pipelined' compile the resident gossip engines "
+                         "(DESIGN.md §6/§7) so the roofline/HLO reports "
+                         "cover them; serve shapes ignore this")
     ap.add_argument("--all", action="store_true",
                     help="all assigned (arch x shape) pairs")
     ap.add_argument("--out", default=None,
@@ -169,7 +186,8 @@ def main():
         for mp in meshes:
             try:
                 records.append(run_pair(arch, shape, multi_pod=mp,
-                                        algo=args.algo))
+                                        algo=args.algo,
+                                        engine=args.engine))
             except Exception as e:
                 traceback.print_exc()
                 failures.append({"arch": arch, "shape": shape,
@@ -182,8 +200,11 @@ def main():
     ARTIFACT_DIR.mkdir(exist_ok=True)
     out = args.out
     if out is None:
-        out = ARTIFACT_DIR / ("roofline.json" if args.mesh == "single"
-                              else f"roofline_{args.mesh}.json")
+        base = "roofline" if args.mesh == "single" \
+            else f"roofline_{args.mesh}"
+        if args.engine != "pytree":   # don't clobber the pytree artifacts
+            base += f"_{args.engine}"
+        out = ARTIFACT_DIR / f"{base}.json"
     payload = {"records": records, "failures": failures}
     pathlib.Path(out).write_text(json.dumps(payload, indent=1))
     print(f"[dryrun] wrote {out}: {len(records)} ok, "

@@ -161,6 +161,79 @@ def _roll_workers_manual(x, shift: int, axis_name, n_shards: int,
     return jnp.concatenate([b[w_local - r:], a[:w_local - r]], axis=0)
 
 
+def _region_ctx(mesh, spec, cfg, n_workers):
+    """Shared setup of the manual-region gossip functions: worker-axis
+    name(s), shard count, local worker count, static row ranges, resolved
+    wire format, and the split/replicated PartitionSpecs."""
+    import math
+
+    from ..core.gossip import packed_row_ranges, resolved_wire_format
+
+    wa = data_axes(mesh)
+    if not wa:
+        raise ValueError(
+            f"mesh has no data axes (axis_names={mesh.axis_names})")
+    axis_name = wa if len(wa) > 1 else wa[0]
+    n_shards = math.prod(mesh.shape[a] for a in wa)
+    w_local = local_worker_count(mesh, n_workers)
+    ranges = packed_row_ranges(spec, cfg)
+    wire = resolved_wire_format(cfg)
+    split = jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
+    rep = jax.sharding.PartitionSpec()
+    return axis_name, n_shards, w_local, ranges, wire, split, rep
+
+
+def _exchange_switch(packed, shift_idx, block_idx, *, cfg, spec, ranges,
+                     wire, roll):
+    """The partial-exchange ``lax.switch`` inside a manual region: every
+    (shift, partition) branch slices a STATIC row range, applies the wire
+    transform, and rolls it along the worker ring with ``roll`` (the
+    ppermute-based manual-region transport).  Returns ``sent`` (float
+    wires) or ``(sent, sent_scales)`` (int8 wire)."""
+    import jax.numpy as jnp
+
+    from ..core.gossip import quantized_exchange_body, wire_roundtrip
+
+    p = cfg.partial_blocks
+    if wire == "int8":
+        def branch(s, r0, r1):
+            def body(x):
+                # shared quantize/scatter body; only the roll transport
+                # (ppermute here, jnp.roll in the GSPMD engine) differs
+                return quantized_exchange_body(
+                    x, r0, r1, spec.block_rows, lambda t: roll(t, s))
+            return body
+    else:
+        def branch(s, r0, r1):
+            def body(x):
+                blk = wire_roundtrip(x[:, r0:r1], cfg)
+                return jnp.zeros_like(x).at[:, r0:r1].set(roll(blk, s))
+            return body
+
+    branches = [branch(s, r0, r1)
+                for s in cfg.shifts for (r0, r1) in ranges]
+    return jax.lax.switch(shift_idx * p + block_idx, branches, packed)
+
+
+def _region_blend(packed, pgrads, ext, ext_scales, ext_idx, step, *, cfg,
+                  acfg, spec, ranges_arr, extra=0, depth=None, lr=None):
+    """The resident-kernel blend inside a manual region, with the
+    step-based staleness guard (``extra=1`` selects the pipelined
+    delay+1 threshold; ``depth`` overrides for single-slot callers) and
+    the fused eq.-1 ``lr`` operand."""
+    from ..core.gossip import staleness_valid
+    from ..kernels.gossip_blend import gossip_blend_w_resident
+
+    valid = staleness_valid(step, cfg, extra=extra, depth=depth)
+    new_packed, gates = gossip_blend_w_resident(
+        packed, pgrads, ext[:, None], ranges_arr[ext_idx], acfg.eps, lr=lr,
+        ext_scales=None if ext_scales is None else ext_scales[:, None],
+        use_parzen=acfg.use_parzen, elastic=acfg.elastic,
+        elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
+        psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+    return new_packed, gates[:, 0]
+
+
 def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     """The whole packed-resident gossip round — exchange AND blend — in one
     shard_map manual region (DESIGN.md §6).
@@ -198,53 +271,31 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
 
-    from ..core.gossip import (packed_row_ranges, quantized_exchange_body,
-                               resolved_wire_format, staleness_valid,
-                               wire_roundtrip)
-    from ..kernels.gossip_blend import gossip_blend_w_resident
-
-    wa = data_axes(mesh)
-    if not wa:
-        raise ValueError(
-            f"mesh has no data axes (axis_names={mesh.axis_names})")
-    axis_name = wa if len(wa) > 1 else wa[0]
-    import math
-    n_shards = math.prod(mesh.shape[a] for a in wa)
-    w_local = local_worker_count(mesh, n_workers)
-    ranges = packed_row_ranges(spec, cfg)
+    axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
+        mesh, spec, cfg, n_workers)
     ranges_arr = jnp.asarray(ranges, jnp.int32)
-    p = cfg.partial_blocks
-    wire = resolved_wire_format(cfg)
 
     def roll(x, s):
         return _roll_workers_manual(x, s, axis_name, n_shards, w_local)
 
+    def exchange(packed, shift_idx, block_idx):
+        return _exchange_switch(packed, shift_idx, block_idx, cfg=cfg,
+                                spec=spec, ranges=ranges, wire=wire,
+                                roll=roll)
+
     def blend(packed, pgrads, ext, ext_scales, ext_idx, step):
-        valid = staleness_valid(step, cfg)
-        new_packed, gates = gossip_blend_w_resident(
-            packed, pgrads, ext[:, None], ranges_arr[ext_idx], acfg.eps,
-            ext_scales=None if ext_scales is None else ext_scales[:, None],
-            use_parzen=acfg.use_parzen, elastic=acfg.elastic,
-            elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-            psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
-        return new_packed, gates[:, 0]
+        # the round's buf argument is a SINGLE received block (the caller
+        # feeds last round's sent back in), so the guard clamps to depth
+        # 1 whatever cfg.delay claims — see staleness_valid
+        return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
+                             step, cfg=cfg, acfg=acfg, spec=spec,
+                             ranges_arr=ranges_arr,
+                             depth=min(cfg.delay, 1))
 
     if wire == "int8":
         def round_fn(packed, pgrads, buf, buf_scales, buf_idx, step,
                      shift_idx, block_idx):
-            def branch(s, r0, r1):
-                def body(x):
-                    # shared quantize/scatter body; only the roll transport
-                    # (ppermute here, jnp.roll in the GSPMD engine) differs
-                    return quantized_exchange_body(
-                        x, r0, r1, spec.block_rows,
-                        lambda t: roll(t, s))
-                return body
-
-            branches = [branch(s, r0, r1)
-                        for s in cfg.shifts for (r0, r1) in ranges]
-            sent, sent_scales = jax.lax.switch(
-                shift_idx * p + block_idx, branches, packed)
+            sent, sent_scales = exchange(packed, shift_idx, block_idx)
             if cfg.delay == 0:
                 ext, ext_scales, ext_idx = sent, sent_scales, block_idx
             else:
@@ -257,16 +308,7 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     else:
         def round_fn(packed, pgrads, buf, buf_idx, step, shift_idx,
                      block_idx):
-            def branch(s, r0, r1):
-                def body(x):
-                    blk = wire_roundtrip(x[:, r0:r1], cfg)
-                    return jnp.zeros_like(x).at[:, r0:r1].set(roll(blk, s))
-                return body
-
-            branches = [branch(s, r0, r1)
-                        for s in cfg.shifts for (r0, r1) in ranges]
-            sent = jax.lax.switch(shift_idx * p + block_idx, branches,
-                                  packed)
+            sent = exchange(packed, shift_idx, block_idx)
             if cfg.delay == 0:
                 ext, ext_idx = sent, block_idx
             else:
@@ -277,8 +319,150 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
 
         n_split_in, n_out = 3, 3
 
-    split = jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
-    rep = jax.sharding.PartitionSpec()
+    return shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(split,) * n_split_in + (rep,) * 4,
+        out_specs=(split,) * n_out,
+        check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# pipelined manual regions (DESIGN.md §7): the exchange is split into its
+# own region so the train step can ISSUE the payload ppermute before the
+# forward/backward — the collective overlaps the compute — while the blend
+# region stays communication-free and consumes the payload launched a round
+# earlier (the caller-carried FIFO head)
+# ---------------------------------------------------------------------------
+
+def shard_map_initiate_exchange(mesh, spec, cfg, *, n_workers=None):
+    """The INITIATE half as its own manual region: ONLY the partial-row
+    ``lax.ppermute`` of this round's payload, launched from the pre-blend
+    ensemble.
+
+    Returns a jittable ``initiate(packed, shift_idx, block_idx)`` over the
+    global ``(W, R, LANE)`` array -> ``sent`` (float wires) or
+    ``(sent, sent_scales)`` (int8 wire).  Its inputs are train-step
+    program inputs, so placed before the forward/backward the collective
+    runs concurrently with it; the product is consumed only by the NEXT
+    round's blend (DESIGN.md §7 timeline)."""
+    from jax.experimental.shard_map import shard_map
+
+    axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
+        mesh, spec, cfg, n_workers)
+
+    def roll(x, s):
+        return _roll_workers_manual(x, s, axis_name, n_shards, w_local)
+
+    def initiate(packed, shift_idx, block_idx):
+        return _exchange_switch(packed, shift_idx, block_idx, cfg=cfg,
+                                spec=spec, ranges=ranges, wire=wire,
+                                roll=roll)
+
+    n_out = 2 if wire == "int8" else 1
+    return shard_map(
+        initiate, mesh=mesh,
+        in_specs=(split,) + (rep,) * 2,
+        out_specs=(split,) * n_out if n_out > 1 else split,
+        check_rep=False)
+
+
+def shard_map_consume_blend(mesh, spec, cfg, acfg, *, n_workers=None,
+                            pipelined: bool = True):
+    """The CONSUME half as its own manual region: the resident fused
+    blend + eq.-1 update of the FIFO-head payload — COMMUNICATION-FREE
+    (the only collective a configuration can add is the tiny
+    ``gate_psum_axes`` accumulator psum), which is the structural proof
+    that the wire is off the blend's critical path.
+
+    Returns ``consume(packed, pgrads, ext[, ext_scales], ext_idx, step)
+    -> (new_packed, gates)``; ``pipelined=True`` (default) applies the
+    delay+1 staleness threshold of the pipelined schedule
+    (staleness_valid extra=1)."""
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    _, _, _, ranges, wire, split, rep = _region_ctx(mesh, spec, cfg,
+                                                    n_workers)
+    ranges_arr = jnp.asarray(ranges, jnp.int32)
+    extra = 1 if pipelined else 0
+
+    if wire == "int8":
+        def consume(packed, pgrads, ext, ext_scales, ext_idx, step):
+            return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
+                                 step, cfg=cfg, acfg=acfg, spec=spec,
+                                 ranges_arr=ranges_arr, extra=extra)
+        n_split_in = 4   # packed, pgrads, ext, ext_scales
+    else:
+        def consume(packed, pgrads, ext, ext_idx, step):
+            return _region_blend(packed, pgrads, ext, None, ext_idx, step,
+                                 cfg=cfg, acfg=acfg, spec=spec,
+                                 ranges_arr=ranges_arr, extra=extra)
+        n_split_in = 3   # packed, pgrads, ext
+
+    return shard_map(
+        consume, mesh=mesh,
+        in_specs=(split,) * n_split_in + (rep,) * 2,  # ext_idx, step
+        out_specs=(split, split),
+        check_rep=False)
+
+
+def shard_map_pipelined_round(mesh, spec, cfg, acfg, *, n_workers=None):
+    """The whole PIPELINED round in one manual region (DESIGN.md §7):
+    blend the caller-carried FIFO-head payload ``ext`` (launched delay+1
+    rounds ago), and launch this round's payload from the PRE-blend
+    ensemble — the ppermute shares no dependency with the blend, so XLA
+    is free to overlap the two inside the region.
+
+    Signatures over global ``(W, R, LANE)`` arrays:
+
+      * float wire: ``round(packed, pgrads, ext, ext_idx, step, shift_idx,
+        block_idx) -> (new_packed, sent, gates)``
+      * int8 wire: ``round(packed, pgrads, ext, ext_scales, ext_idx, step,
+        shift_idx, block_idx) -> (new_packed, sent, sent_scales, gates)``
+
+    The FIFO pop/push lives with the caller (the GSPMD engine
+    core/gossip.py asgd_gossip_apply_pipelined is the in-jit formulation
+    of the identical round; parity is asserted in
+    tests/test_gossip_pipelined.py on 8 fake devices)."""
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
+        mesh, spec, cfg, n_workers)
+    ranges_arr = jnp.asarray(ranges, jnp.int32)
+
+    def roll(x, s):
+        return _roll_workers_manual(x, s, axis_name, n_shards, w_local)
+
+    def exchange(packed, shift_idx, block_idx):
+        return _exchange_switch(packed, shift_idx, block_idx, cfg=cfg,
+                                spec=spec, ranges=ranges, wire=wire,
+                                roll=roll)
+
+    def blend(packed, pgrads, ext, ext_scales, ext_idx, step):
+        return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
+                             step, cfg=cfg, acfg=acfg, spec=spec,
+                             ranges_arr=ranges_arr, extra=1)
+
+    if wire == "int8":
+        def round_fn(packed, pgrads, ext, ext_scales, ext_idx, step,
+                     shift_idx, block_idx):
+            new_packed, gates = blend(packed, pgrads, ext, ext_scales,
+                                      ext_idx, step)
+            sent, sent_scales = exchange(packed, shift_idx, block_idx)
+            return new_packed, sent, sent_scales, gates
+
+        n_split_in, n_out = 4, 4
+    else:
+        def round_fn(packed, pgrads, ext, ext_idx, step, shift_idx,
+                     block_idx):
+            new_packed, gates = blend(packed, pgrads, ext, None, ext_idx,
+                                      step)
+            sent = exchange(packed, shift_idx, block_idx)
+            return new_packed, sent, gates
+
+        n_split_in, n_out = 3, 3
+
     return shard_map(
         round_fn, mesh=mesh,
         in_specs=(split,) * n_split_in + (rep,) * 4,

@@ -32,6 +32,13 @@ from .mesh import data_axes, n_worker_groups
 
 PARAM_DTYPE = jnp.bfloat16
 
+# train-step engines (input_specs / step_and_args / dryrun --engine):
+#   pytree    — the per-leaf GSPMD formulation (the historical default)
+#   packed    — the packed-resident ensemble (DESIGN.md §6)
+#   pipelined — packed-resident + the one-round-deep exchange pipeline and
+#               packed-native gradients (DESIGN.md §7)
+ENGINES = ("pytree", "packed", "pipelined")
+
 
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStructs — never allocated)
@@ -115,13 +122,96 @@ def gossip_struct(cfg: ModelConfig, mesh, gcfg: GossipConfig):
         step=attach(state.step, rep))
 
 
+def packed_spec_for(cfg: ModelConfig, mesh, gcfg: GossipConfig):
+    """Group-contiguous WPackSpec of the train-param structure.
+
+    Built from ``eval_shape`` structs (pack_spec_w/leaf_groups only read
+    shapes and sizes), so the dry-run can derive the resident layout
+    without allocating a single parameter."""
+    from ..core.gossip import leaf_groups
+    from ..core.packing import pack_spec_w
+
+    p_struct = params_struct(cfg, mesh, train=True)
+    groups = leaf_groups(p_struct, gcfg.partial_blocks)
+    return pack_spec_w(p_struct, block_rows=gcfg.fused_block_rows,
+                       groups=groups, n_groups=gcfg.partial_blocks)
+
+
+def _worker_split(mesh):
+    wa = data_axes(mesh)
+    return jax.sharding.PartitionSpec(wa if len(wa) > 1 else wa[0])
+
+
+def packed_params_struct(cfg: ModelConfig, mesh, gcfg: GossipConfig,
+                         spec=None):
+    """ShapeDtypeStruct of the resident (W, rows, LANE) f32 ensemble,
+    worker axis sharded over the data axes."""
+    from ..kernels import LANE
+
+    spec = spec or packed_spec_for(cfg, mesh, gcfg)
+    sharding = jax.sharding.NamedSharding(mesh, _worker_split(mesh))
+    return jax.ShapeDtypeStruct((spec.n_workers, spec.rows, LANE),
+                                jnp.float32, sharding=sharding)
+
+
+def packed_gossip_struct(cfg: ModelConfig, mesh, gcfg: GossipConfig,
+                         spec=None, *, pipelined: bool = False):
+    """Sharded ShapeDtypeStructs of the PackedGossipState a packed-resident
+    / pipelined run carries (FIFO depth per core.gossip.fifo_depth; buf
+    shards along its worker axis — axis 1 when the FIFO is stacked)."""
+    from ..core.gossip import (fifo_depth, init_packed_gossip_state,
+                               resolved_wire_format)
+
+    spec = spec or packed_spec_for(cfg, mesh, gcfg)
+    p_struct = packed_params_struct(cfg, mesh, gcfg, spec)
+    depth = fifo_depth(gcfg, pipelined=pipelined)
+    block_rows = spec.block_rows \
+        if resolved_wire_format(gcfg) == "int8" else None
+    state = jax.eval_shape(
+        lambda p: init_packed_gossip_state(p, gcfg, block_rows=block_rows,
+                                           depth=depth), p_struct)
+    wsplit = _worker_split(mesh)
+    buf_ps = (jax.sharding.PartitionSpec(None, *wsplit) if depth >= 2
+              else wsplit)
+    buf_sh = jax.sharding.NamedSharding(mesh, buf_ps)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def attach(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return type(state)(
+        buf=attach(state.buf, buf_sh),
+        buf_scales=(None if state.buf_scales is None
+                    else attach(state.buf_scales, buf_sh)),
+        buf_idx=attach(state.buf_idx, rep),
+        step=attach(state.step, rep))
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                gcfg: GossipConfig | None = None) -> dict:
-    """Everything a step function needs, as sharded ShapeDtypeStructs."""
+                gcfg: GossipConfig | None = None,
+                engine: str = "pytree") -> dict:
+    """Everything a step function needs, as sharded ShapeDtypeStructs.
+
+    engine: 'pytree' (per-leaf params + GossipState) or
+    'packed'/'pipelined' (resident (W, rows, LANE) ensemble +
+    PackedGossipState — the dry-run route for resident HLO rooflines)."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (expected {ENGINES})")
     gcfg = gcfg or GossipConfig()
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     key = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
     if shape.kind == "train":
+        if engine != "pytree":
+            spec = packed_spec_for(cfg, mesh, gcfg)
+            return {
+                "params": packed_params_struct(cfg, mesh, gcfg, spec),
+                "gossip": packed_gossip_struct(
+                    cfg, mesh, gcfg, spec,
+                    pipelined=engine == "pipelined"),
+                "opt": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep),
+                "batch": batch_struct(cfg, shape, mesh, train=True),
+                "key": key,
+            }
         return {
             "params": params_struct(cfg, mesh, train=True),
             "gossip": gossip_struct(cfg, mesh, gcfg),
@@ -160,7 +250,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
 def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                     gcfg: GossipConfig | None = None,
                     acfg: ASGDConfig | None = None, remat=True,
-                    spmd_axes=None, packed_resident=False, pack_spec=None):
+                    spmd_axes=None, packed_resident=False, pack_spec=None,
+                    pipelined=False):
     """Returns step(params, gossip, opt_state, batch, key)
             -> (params, gossip, opt_state, metrics).
 
@@ -187,8 +278,20 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
     Wire format / staleness: gcfg.wire_format selects what the gossip
     collective ships (DESIGN.md §6 wire formats — "int8" quantizes the
     exchanged block, wire bytes /4), and every algo='asgd' round applies
-    the round-1 staleness guard (the delay>0 init buffer is gated out
-    explicitly at step 0 rather than via eq.-3 zero detection).
+    the warm-up staleness guard (delay>0 init buffer slots are gated out
+    explicitly by step rather than via eq.-3 zero detection).
+
+    pipelined (DESIGN.md §7, requires packed_resident + algo='asgd' +
+    gossip_every == 1): the gossip round becomes a one-round-deep
+    pipeline — the step ISSUES this round's payload ppermute before the
+    forward/backward (both read only the program's input ensemble, so the
+    collective overlaps the compute) and BLENDS the payload launched
+    delay+1 rounds ago (core.gossip consume_exchange_packed; ``gossip``
+    is the init_pipelined_gossip_state FIFO).  The loss is differentiated
+    directly w.r.t. the packed ensemble through unpack_rows views, so the
+    gradient is BORN packed — the per-round pack_w(grads) full-state copy
+    of the unpipelined packed step disappears (bitwise the same values:
+    the VJP of the unpack views IS pack_w).
     """
     from ..optim import (adam_update, momentum_update)
 
@@ -197,6 +300,20 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
     if packed_resident and pack_spec is None:
         raise ValueError("packed_resident=True requires pack_spec "
                          "(core.packing.pack_spec_w)")
+    if pipelined:
+        if not packed_resident:
+            raise ValueError("pipelined=True requires packed_resident=True")
+        if algo != "asgd":
+            raise ValueError(
+                f"pipelined=True requires algo='asgd' (got {algo!r}): the "
+                "pipeline overlaps the gossip exchange — sync/silent have "
+                "no exchange to overlap")
+        if gcfg.gossip_every > 1:
+            raise ValueError(
+                "pipelined=True requires gossip_every == 1 (the split "
+                "initiate/consume step has no off-round branch; use "
+                "core.gossip.asgd_gossip_apply_pipelined for interval "
+                "gossip)")
 
     def per_worker_loss(p, b):
         return M.loss_fn(cfg, p, b, remat=remat)
@@ -243,6 +360,48 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
 
     from ..core.gossip import asgd_gossip_apply_packed
     from ..core.packing import pack_w, unpack_w
+
+    if pipelined:
+        from ..core.gossip import (_silent_round, consume_exchange_packed,
+                                   initiate_exchange_packed)
+        from ..core.packing import unpack_rows
+
+        def pipelined_step(packed, gossip, opt_state, batch, key):
+            # 1. INITIATE: launch this round's payload from the program
+            #    input — the ppermute shares no dependency with the
+            #    forward/backward below, so it runs concurrently with it
+            if not acfg.silent:
+                sent, sent_scales, block_idx = initiate_exchange_packed(
+                    packed, key, gcfg, pack_spec)
+
+            # 2. forward/backward, differentiated w.r.t. the PACKED rows:
+            #    the unpack views fuse into the consumers and the VJP
+            #    accumulates the gradient directly in packed layout
+            def loss_of_rows(rows2d, b):
+                return per_worker_loss(unpack_rows(rows2d, pack_spec), b)
+
+            loss, pgrads = jax.vmap(jax.value_and_grad(loss_of_rows),
+                                    **vmap_kw)(packed, batch)
+            dw, opt_state = direction(packed, pgrads, opt_state)
+
+            if acfg.silent:
+                # SimuParallelSGD ablation: pure local step, nothing on
+                # the wire, FIFO untouched — the shared silent-round body
+                new_packed, new_gossip, gm = _silent_round(
+                    packed, dw, gossip, acfg.eps)
+                metrics = {"loss": jnp.mean(loss), **gm}
+                return new_packed, new_gossip, opt_state, metrics
+
+            # 3. CONSUME: fused blend + eq.-1 update of the payload
+            #    launched delay+1 rounds ago; push this round's launch
+            new_packed, new_gossip, gm = consume_exchange_packed(
+                packed, dw, gossip, sent, sent_scales, block_idx, gcfg,
+                acfg, pack_spec)
+            metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
+                       "gate": gm["gate"]}
+            return new_packed, new_gossip, opt_state, metrics
+
+        return pipelined_step
 
     def packed_step(packed, gossip, opt_state, batch, key):
         params = unpack_w(packed, pack_spec)   # views of the resident buf
@@ -301,13 +460,25 @@ def make_decode_step(cfg: ModelConfig):
 
 
 def step_and_args(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                  gcfg: GossipConfig | None = None, algo="asgd"):
-    """(callable, kwargs-of-ShapeDtypeStructs) for jit().lower(**kwargs)."""
-    specs = input_specs(cfg, shape, mesh, gcfg)
+                  gcfg: GossipConfig | None = None, algo="asgd",
+                  engine: str = "pytree"):
+    """(callable, kwargs-of-ShapeDtypeStructs) for jit().lower(**kwargs).
+
+    engine selects the train formulation (ENGINES): 'packed'/'pipelined'
+    route through make_train_step(packed_resident=True[, pipelined=True])
+    on the struct-derived pack spec, so the dry-run lowers and costs the
+    resident engines end-to-end (DESIGN.md §6/§7)."""
+    specs = input_specs(cfg, shape, mesh, gcfg, engine=engine)
     if shape.kind == "train":
         wa = data_axes(mesh)
-        fn = make_train_step(cfg, algo=algo, gcfg=gcfg,
-                             spmd_axes=wa if len(wa) > 1 else wa[0])
+        spmd = wa if len(wa) > 1 else wa[0]
+        if engine != "pytree":
+            spec = packed_spec_for(cfg, mesh, gcfg or GossipConfig())
+            fn = make_train_step(cfg, algo=algo, gcfg=gcfg, spmd_axes=spmd,
+                                 packed_resident=True, pack_spec=spec,
+                                 pipelined=engine == "pipelined")
+        else:
+            fn = make_train_step(cfg, algo=algo, gcfg=gcfg, spmd_axes=spmd)
         return fn, specs  # params, gossip, batch, key
     if shape.kind == "prefill":
         return make_prefill_step(cfg), specs

@@ -24,7 +24,8 @@ from ..checkpoint import (load_checkpoint, load_checkpoint_packed,
 from ..configs.registry import get_arch
 from ..core.asgd import ASGDConfig
 from ..core.gossip import (GossipConfig, final_average, init_gossip_state,
-                           init_packed_gossip_state, leaf_groups)
+                           init_packed_gossip_state,
+                           init_pipelined_gossip_state, leaf_groups)
 from ..core.packing import pack_spec_w, pack_w, unpack_w
 from ..data.synthetic import lm_batch_iterator
 from ..models import model as M
@@ -71,6 +72,17 @@ def main(argv=None):
                          "steps (DESIGN.md §6): gossip exchange + blend on "
                          "packed rows; unpack only at checkpoint/final "
                          "boundaries")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="pipeline the gossip round (DESIGN.md §7, implies "
+                         "--packed-resident): issue the payload exchange "
+                         "before the forward/backward, blend the payload "
+                         "launched delay+1 rounds ago, and differentiate "
+                         "the loss directly w.r.t. the packed ensemble "
+                         "(the gradient is born packed; with "
+                         "--inner momentum/adam the moments are packed "
+                         "too, so such checkpoints restore only into "
+                         "pipelined runs — sgd checkpoints stay fully "
+                         "layout-interoperable)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None, help="checkpoint path")
     ap.add_argument("--restore", default=None,
@@ -101,6 +113,8 @@ def main(argv=None):
     acfg = ASGDConfig(eps=args.eps, elastic=args.elastic)
     from .steps import init_inner_state
     spec = None
+    if args.pipelined:
+        args.packed_resident = True
     if args.packed_resident:
         # pack ONCE at init; the ensemble stays packed until checkpoint /
         # final-aggregate boundaries (DESIGN.md §6)
@@ -109,10 +123,18 @@ def main(argv=None):
             groups=leaf_groups(wparams, gcfg.partial_blocks),
             n_groups=gcfg.partial_blocks)
         packed = pack_w(wparams, spec)
-        state = {"params": packed,
-                 "gossip": init_packed_gossip_state(
-                     packed, gcfg, block_rows=spec.block_rows),
-                 "opt": init_inner_state(wparams, args.inner),
+        wire_br = spec.block_rows if wire_format == "int8" else None
+        if args.pipelined:
+            # pipelined FIFO (depth delay+1) + packed-shaped inner-
+            # optimizer state: the gradient is born packed (DESIGN.md §7)
+            gossip0 = init_pipelined_gossip_state(packed, gcfg,
+                                                  block_rows=wire_br)
+            opt0 = init_inner_state(packed, args.inner)
+        else:
+            gossip0 = init_packed_gossip_state(packed, gcfg,
+                                               block_rows=wire_br)
+            opt0 = init_inner_state(wparams, args.inner)
+        state = {"params": packed, "gossip": gossip0, "opt": opt0,
                  "step": jnp.int32(0)}
         if args.restore:
             state = load_checkpoint_packed(args.restore, state, spec)
@@ -128,7 +150,8 @@ def main(argv=None):
 
     step_fn = jax.jit(make_train_step(
         cfg, algo=args.algo, gcfg=gcfg, acfg=acfg, inner=args.inner,
-        packed_resident=args.packed_resident, pack_spec=spec))
+        packed_resident=args.packed_resident, pack_spec=spec,
+        pipelined=args.pipelined))
     its = [lm_batch_iterator(
         args.seed * 1000 + w, args.batch, args.seq, cfg.vocab,
         frontend=cfg.frontend, d_model=cfg.d_model,
