@@ -36,10 +36,43 @@ def _decode_leaf(d):
     return jnp.asarray(raw)
 
 
+def _is_gossip_node(n) -> bool:
+    from ..core.gossip import GossipState, PackedGossipState
+    return isinstance(n, (GossipState, PackedGossipState))
+
+
+def _strip_live(tree):
+    """Canonical (on-disk) view of a train state: the transient buf_live
+    peer-liveness mask (DESIGN.md §8) is dropped from every GossipState
+    node — elastic and legacy runs write the identical file format, and a
+    restored run re-enters the join window at whatever mask the live
+    ``like`` state carries (zeros for an elastic init)."""
+    from ..core.gossip import GossipState
+
+    def fix(n):
+        if isinstance(n, GossipState) and n.buf_live is not None:
+            return GossipState(n.buf, n.buf_idx, n.step)
+        return n
+
+    return jax.tree.map(fix, tree, is_leaf=_is_gossip_node)
+
+
+def _reattach_live(restored, like):
+    """Re-seat ``like``'s transient buf_live onto the restored state."""
+    from ..core.gossip import GossipState
+
+    def fix(r, l):
+        if isinstance(l, GossipState) and l.buf_live is not None:
+            return GossipState(r.buf, r.buf_idx, r.step, l.buf_live)
+        return r
+
+    return jax.tree.map(fix, restored, like, is_leaf=_is_gossip_node)
+
+
 def save_checkpoint(path, tree) -> None:
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    leaves, treedef = jax.tree.flatten(tree)
+    leaves, treedef = jax.tree.flatten(_strip_live(tree))
     payload = {
         "treedef": str(treedef),
         "leaves": [_encode_leaf(x) for x in leaves],
@@ -49,10 +82,20 @@ def save_checkpoint(path, tree) -> None:
     tmp.rename(path)  # atomic publish
 
 
-def load_checkpoint(path, like):
-    """Restore into the structure of `like` (shape/dtype validated)."""
+def load_checkpoint(path, like, resize_workers: bool = False):
+    """Restore into the structure of `like` (shape/dtype validated).
+
+    resize_workers=True (the --elastic restore path, DESIGN.md §8)
+    accepts leaves whose LEADING axis disagrees with ``like`` as long as
+    the tail shape matches, and re-seats them onto ``like``'s worker
+    count (core.packing.resize_worker_axis: shrink slices, grow tiles
+    cyclically) — a checkpoint saved at one W restores onto another.
+    Any other mismatch still raises."""
+    from ..core.packing import resize_worker_axis
+
     payload = msgpack.unpackb(pathlib.Path(path).read_bytes(), raw=False)
-    leaves, treedef = jax.tree.flatten(like)
+    like_stripped = _strip_live(like)
+    leaves, treedef = jax.tree.flatten(like_stripped)
     if len(payload["leaves"]) != len(leaves):
         raise ValueError(
             f"checkpoint has {len(payload['leaves'])} leaves, "
@@ -61,10 +104,14 @@ def load_checkpoint(path, like):
     for got, want in zip(payload["leaves"], leaves):
         arr = _decode_leaf(got)
         if tuple(arr.shape) != tuple(want.shape):
-            raise ValueError(
-                f"shape mismatch {arr.shape} vs {want.shape}")
+            if (resize_workers and arr.ndim >= 1 and arr.ndim == want.ndim
+                    and tuple(arr.shape[1:]) == tuple(want.shape[1:])):
+                arr = resize_worker_axis(arr, int(want.shape[0]))
+            else:
+                raise ValueError(
+                    f"shape mismatch {arr.shape} vs {want.shape}")
         out.append(arr.astype(want.dtype))
-    return jax.tree.unflatten(treedef, out)
+    return _reattach_live(jax.tree.unflatten(treedef, out), like)
 
 
 # ---------------------------------------------------------------------------
@@ -125,18 +172,27 @@ def save_checkpoint_packed(path, state, spec) -> None:
     save_checkpoint(path, _packed_state_to_tree(state, spec))
 
 
-def load_checkpoint_packed(path, like_state, spec):
+def load_checkpoint_packed(path, like_state, spec, elastic: bool = False):
     """Inverse of :func:`save_checkpoint_packed`: restore a canonical
     checkpoint into the packed-resident layout (re-packs params and the
     staleness buffer with ``spec``).  If ``like_state`` carries an
     int8-wire gossip buffer (buf_scales is not None) the restored float
     buffer is RE-quantized — the scales are reconstructed from the values
     (bit-exact for buffers that made the wire round-trip: the absmax
-    element quantized to ±127, so the recovered scale is the original)."""
+    element quantized to ±127, so the recovered scale is the original).
+
+    elastic=True restores a checkpoint saved at a DIFFERENT worker count
+    (DESIGN.md §8): the canonical leaves are re-seated onto ``spec``'s
+    worker count (load_checkpoint resize_workers) before re-packing onto
+    the fresh ``pack_spec_w`` — the per-worker row layout is W-invariant,
+    so only the leading axis moves.  The transient buf_live mask comes
+    from ``like_state`` (zeros for an elastic init: every restored buffer
+    slot sits inside the join window until real exchanges refill it)."""
     from ..core.gossip import PackedGossipState
     from ..core.packing import pack_w, quantize_rows
 
-    tree = load_checkpoint(path, _packed_state_to_tree(like_state, spec))
+    tree = load_checkpoint(path, _packed_state_to_tree(like_state, spec),
+                           resize_workers=elastic)
     out = dict(tree)
     out["params"] = pack_w(tree["params"], spec)
     g = tree["gossip"]
@@ -145,11 +201,13 @@ def load_checkpoint_packed(path, like_state, spec):
     else:
         buf = pack_w(g.buf, spec)
     like_g = like_state["gossip"]
+    live = getattr(like_g, "buf_live", None)
     if getattr(like_g, "buf_scales", None) is not None:
         q, scales = quantize_rows(buf, spec.block_rows)
         out["gossip"] = PackedGossipState(buf=q, buf_scales=scales,
-                                          buf_idx=g.buf_idx, step=g.step)
+                                          buf_idx=g.buf_idx, step=g.step,
+                                          buf_live=live)
     else:
         out["gossip"] = PackedGossipState(buf=buf, buf_idx=g.buf_idx,
-                                          step=g.step)
+                                          step=g.step, buf_live=live)
     return out

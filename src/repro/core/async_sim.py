@@ -129,6 +129,24 @@ class AsyncSimConfig:
     straggler_ms: per-round sleep for straggler ranks (real clusters: NUMA,
       network, OS jitter — the paper's 1024-CPU setting). 0 disables.
     straggler_frac: fraction of ranks that are stragglers.
+
+    Chaos / elasticity (DESIGN.md §8 — the thread-world proof layer of
+    the SPMD liveness gates):
+    chaos_kills: ranks to kill-and-revive mid-run (0 disables). A dead
+      rank freezes (no compute, no reads, no sends); writes addressed to
+      it are dropped on the floor (a GASPI write to a crashed node); on
+      revival it clears its receive buffers first, so it re-enters
+      through the eq.-3 zero mask — the analogue of the SPMD join window.
+    chaos_seed: seed of the kill schedule ONLY (decoupled from the data/
+      transport seed so the same trajectory can be replayed under a
+      different churn pattern and vice versa).
+    chaos_schedule: explicit ((rank, kill_round, revive_round), ...)
+      triples; overrides chaos_kills when non-empty.
+    deterministic: run the ranks single-threaded in round-robin order
+      (rank 0..R-1 within each round) instead of free-running threads —
+      every rng stream and buffer interleaving is then a pure function of
+      (seed, chaos schedule), so trajectories replay BITWISE. Used by the
+      chaos regression tests; the racy threaded mode stays the default.
     """
 
     ranks: int = 8
@@ -139,7 +157,31 @@ class AsyncSimConfig:
     partial_fraction: float = 1.0
     straggler_ms: float = 0.0
     straggler_frac: float = 0.25
+    chaos_kills: int = 0
+    chaos_seed: int = 0
+    chaos_schedule: tuple = ()
+    deterministic: bool = False
     asgd: ASGDConfig = dataclasses.field(default_factory=ASGDConfig)
+
+
+def make_kill_schedule(ranks: int, rounds: int, kills: int,
+                       chaos_seed: int = 0) -> tuple:
+    """Seeded ((rank, kill_round, revive_round), ...) churn schedule.
+
+    Victims are distinct ranks (at most ranks-1, so somebody survives);
+    kills land in [rounds//4, rounds//2], outages last [rounds//8,
+    rounds//3] and every victim revives before the run ends — the
+    schedule exercises death AND the rejoin window, not just death.
+    Deterministic in (ranks, rounds, kills, chaos_seed)."""
+    rng = np.random.default_rng(chaos_seed)
+    n = min(kills, max(ranks - 1, 0))
+    victims = rng.choice(ranks, size=n, replace=False)
+    out = []
+    for r in victims:
+        k = int(rng.integers(max(1, rounds // 4), rounds // 2 + 1))
+        down = int(rng.integers(max(1, rounds // 8), rounds // 3 + 1))
+        out.append((int(r), k, min(k + down, rounds - 1)))
+    return tuple(out)
 
 
 class AsyncASGD:
@@ -165,7 +207,17 @@ class AsyncASGD:
             for _ in range(R)]
         self.msgs_sent = np.zeros(R, dtype=np.int64)
         self.msgs_good = np.zeros(R, dtype=np.int64)
+        self.msgs_dropped = np.zeros(R, dtype=np.int64)
         self.err_trace: List[List[float]] = [[] for _ in range(R)]
+        # churn plan (DESIGN.md §8): explicit schedule wins; else seeded
+        self.kill_schedule = tuple(cfg.chaos_schedule) or (
+            make_kill_schedule(R, cfg.rounds, cfg.chaos_kills,
+                               cfg.chaos_seed)
+            if cfg.chaos_kills > 0 else ())
+        self._kill_revive = {r: (k, v) for r, k, v in self.kill_schedule}
+        # shared liveness view senders consult (racy in thread mode — a
+        # write can still race a crash, exactly like a real RDMA fabric)
+        self.alive = np.ones(R, dtype=bool)
 
     # -- single-sided transport ------------------------------------------------
     def _send(self, state: np.ndarray, dst: int, slot: int, rng) -> None:
@@ -194,46 +246,88 @@ class AsyncASGD:
             time.sleep(0)  # yield: let another writer interleave
 
     # -- per-rank main loop ------------------------------------------------------
-    def _run_rank(self, r: int) -> None:
+    def _rank_round(self, r: int, t: int, rng, is_straggler: bool) -> None:
+        """One mini-batch round of rank r — the exact body the threaded
+        loop always ran, factored out so the deterministic round-robin
+        replay (cfg.deterministic) drives the identical code and rng call
+        sequence."""
         cfg = self.cfg
-        rng = np.random.default_rng(self.seed * 7919 + r)
-        shard = self.shards[r]
-        H = shard.shape[0]
-        is_straggler = (cfg.straggler_ms > 0
-                        and r < cfg.straggler_frac * cfg.ranks)
-        for t in range(cfg.rounds):
-            if is_straggler:
-                time.sleep(cfg.straggler_ms / 1000.0)
-            idx = rng.integers(0, H, size=cfg.asgd.batch)
-            dw = self.grad_fn(shard[idx], self.w[r])
-            # read receive buffers (racy read: snapshot copies, may be torn)
-            externals = [] if cfg.asgd.silent else [
-                b.copy() for b in self.buffers[r]]
-            w_next, n_good = _asgd_update_np(self.w[r], dw, externals, cfg.asgd)
-            self.w[r] = w_next
-            self.msgs_good[r] += int(n_good)
-            # consume: clear own buffers (GASPI notify-reset analogue)
-            if not cfg.asgd.silent:
+        kv = self._kill_revive.get(r)
+        if kv is not None:
+            k, v = kv
+            if k <= t < v:
+                # dead: frozen w, no compute, no reads, no sends. The rng
+                # stream pauses with the rank (the schedule is part of the
+                # determinism key, so replays still match bitwise).
+                self.alive[r] = False
+                return
+            if t == v and not self.alive[r]:
+                # revival: pre-death mail is a whole outage stale — drop
+                # it and re-enter through the eq.-3 zero mask, the
+                # thread-world analogue of the SPMD join window
                 for b in self.buffers[r]:
                     b[:] = 0.0
-                # send to `fanout` random other ranks, random slots, no waiting
-                for _ in range(cfg.fanout):
-                    dst = int(rng.integers(0, cfg.ranks - 1))
-                    dst = dst if dst < r else dst + 1  # != r
-                    slot = int(rng.integers(0, cfg.n_buffers))
-                    self._send(w_next, dst, slot, rng)
-                    self.msgs_sent[r] += 1
-            if t % 10 == 0:
-                self.err_trace[r].append(self.error_fn(self.w[r]))
+                self.alive[r] = True
+        if is_straggler:
+            time.sleep(cfg.straggler_ms / 1000.0)
+        shard = self.shards[r]
+        H = shard.shape[0]
+        idx = rng.integers(0, H, size=cfg.asgd.batch)
+        dw = self.grad_fn(shard[idx], self.w[r])
+        # read receive buffers (racy read: snapshot copies, may be torn)
+        externals = [] if cfg.asgd.silent else [
+            b.copy() for b in self.buffers[r]]
+        w_next, n_good = _asgd_update_np(self.w[r], dw, externals, cfg.asgd)
+        self.w[r] = w_next
+        self.msgs_good[r] += int(n_good)
+        # consume: clear own buffers (GASPI notify-reset analogue)
+        if not cfg.asgd.silent:
+            for b in self.buffers[r]:
+                b[:] = 0.0
+            # send to `fanout` random other ranks, random slots, no waiting
+            for _ in range(cfg.fanout):
+                dst = int(rng.integers(0, cfg.ranks - 1))
+                dst = dst if dst < r else dst + 1  # != r
+                slot = int(rng.integers(0, cfg.n_buffers))
+                if not self.alive[dst]:
+                    # one-sided write to a crashed node: lost, unnoticed
+                    self.msgs_dropped[r] += 1
+                    continue
+                self._send(w_next, dst, slot, rng)
+                self.msgs_sent[r] += 1
+        if t % 10 == 0:
+            self.err_trace[r].append(self.error_fn(self.w[r]))
+
+    def _is_straggler(self, r: int) -> bool:
+        cfg = self.cfg
+        return cfg.straggler_ms > 0 and r < cfg.straggler_frac * cfg.ranks
+
+    def _run_rank(self, r: int) -> None:
+        rng = np.random.default_rng(self.seed * 7919 + r)
+        strag = self._is_straggler(r)
+        for t in range(self.cfg.rounds):
+            self._rank_round(r, t, rng, strag)
 
     def run(self) -> dict:
-        threads = [threading.Thread(target=self._run_rank, args=(r,))
-                   for r in range(self.cfg.ranks)]
         t0 = time.perf_counter()
-        for th in threads:
-            th.start()
-        for th in threads:
-            th.join()
+        if self.cfg.deterministic:
+            # round-robin replay: same per-rank rng streams, fixed global
+            # interleaving — the whole trajectory is a pure function of
+            # (seed, kill_schedule) and replays bitwise
+            R = self.cfg.ranks
+            rngs = [np.random.default_rng(self.seed * 7919 + r)
+                    for r in range(R)]
+            strag = [self._is_straggler(r) for r in range(R)]
+            for t in range(self.cfg.rounds):
+                for r in range(R):
+                    self._rank_round(r, t, rngs[r], strag[r])
+        else:
+            threads = [threading.Thread(target=self._run_rank, args=(r,))
+                       for r in range(self.cfg.ranks)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
         wall = time.perf_counter() - t0
         w_first = self.w[0]
         w_mean = np.mean(np.stack(self.w), axis=0)
@@ -244,7 +338,9 @@ class AsyncASGD:
             "error_mean_aggregate": self.error_fn(w_mean),
             "msgs_sent": self.msgs_sent.copy(),
             "msgs_good": self.msgs_good.copy(),
+            "msgs_dropped": self.msgs_dropped.copy(),
             "err_trace": [list(t) for t in self.err_trace],
+            "kill_schedule": self.kill_schedule,
             "wall_seconds": wall,
         }
 

@@ -178,6 +178,78 @@ def wire_roundtrip(tree, cfg: GossipConfig):
 
 
 # ---------------------------------------------------------------------------
+# per-peer liveness (elastic fault tolerance — DESIGN.md §8): a (W,) f32
+# 0/1 vector saying which worker groups are alive THIS round.  A dead (or
+# just-joined) peer's payload is dropped on the wire (masked to the eq.-3
+# all-zero 'no message') and its gate is closed at the blend — the existing
+# gate_scale operand composes the scalar staleness guard with the per-peer
+# vector, so no kernel or gate math changes.  live=None everywhere keeps
+# the exact legacy computation.
+# ---------------------------------------------------------------------------
+
+def roll_live(live, shift_idx, cfg: GossipConfig):
+    """Receiver-side validity of this round's payload: worker w's slot is
+    real iff the SENDER (w - shift) was alive at launch AND w itself is
+    alive to receive it.  Same lax.switch-over-static-shifts structure as
+    the payload exchange, so the two travel the identical permutation."""
+    branches = [(lambda l, s=s: jnp.roll(l, s, axis=0))
+                for s in cfg.shifts]
+    return jax.lax.switch(shift_idx, branches, live) * live
+
+
+def mask_live_rows(x, live):
+    """Zero the worker rows whose liveness is 0 (eq. 3: an all-zero block
+    IS 'no message').  jnp.where, not multiplication — live rows pass
+    through bitwise (the live=ones parity guarantee) and int8 payloads
+    stay int8."""
+    if live is None:
+        return x
+    cond = live.reshape((-1,) + (1,) * (x.ndim - 1)) > 0.0
+    return jnp.where(cond, x, jnp.zeros_like(x))
+
+
+def mask_live_tree(tree, live):
+    """mask_live_rows over every (W, ...) leaf of a pytree."""
+    if live is None:
+        return tree
+    return jax.tree.map(lambda x: mask_live_rows(x, live), tree)
+
+
+def combine_gate_scale(valid, *lives):
+    """Fold the scalar staleness guard and any per-peer liveness vectors
+    into the ONE gate_scale operand the blend paths already accept
+    (kernels/gossip_blend ops.py _scale_gates handles scalar and (W,)).
+    None entries are skipped; all-None returns None (no gating)."""
+    out = valid
+    for lv in lives:
+        if lv is None:
+            continue
+        out = lv if out is None else out * lv
+    return out
+
+
+def _resolve_live(state_is_elastic: bool, live, n_workers: int,
+                  engine: str):
+    """Normalize the per-round ``live`` argument against the state.
+
+    Elastic-initialized states (init_*_gossip_state(elastic=True) carry a
+    buf_live mask) default to all-alive when the caller passes nothing;
+    passing ``live`` into a NON-elastic state raises — lazily growing
+    buf_live mid-run would change the carried pytree structure between
+    jitted steps."""
+    if state_is_elastic:
+        if live is None:
+            return jnp.ones((n_workers,), jnp.float32)
+        return jnp.asarray(live, jnp.float32)
+    if live is not None:
+        raise ValueError(
+            f"{engine}: live= requires a state initialized with "
+            "elastic=True (the carried buf_live mask cannot appear "
+            "mid-run without changing the state pytree structure)")
+    return None
+
+
+# ---------------------------------------------------------------------------
 # leaf partitioning ('leaves' mode)
 # ---------------------------------------------------------------------------
 
@@ -360,21 +432,27 @@ class GossipState:
       full-tree shape, zeros outside the group; 'rows' mode: block tree).
     buf_idx: which partition index buf holds.
     step: round counter.
+    buf_live: per-peer liveness of buf's worker rows, (W,) f32 0/1
+      (DESIGN.md §8) — None unless the state was initialized with
+      elastic=True.  Transient like buf_scales: checkpoints canonicalize
+      it away (a restored state re-enters the join window at zeros).
     """
 
     buf: Any
     buf_idx: jnp.ndarray
     step: jnp.ndarray
+    buf_live: Any = None
 
     def tree_flatten(self):
-        return (self.buf, self.buf_idx, self.step), None
+        return (self.buf, self.buf_idx, self.step, self.buf_live), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
 
-def init_gossip_state(params, cfg: GossipConfig) -> GossipState:
+def init_gossip_state(params, cfg: GossipConfig,
+                      elastic: bool = False) -> GossipState:
     """Zero staleness buffer in the CARRIER dtype.
 
     Paper eq. 3 reads an all-zero buffer as 'no message yet' — but the
@@ -384,13 +462,25 @@ def init_gossip_state(params, cfg: GossipConfig) -> GossipState:
     on the first delayed round regardless of the buffer's content.  The
     buffer stores carrier-dtype values post wire round-trip in every mode
     (wire_roundtrip), so delayed-buffer dtypes no longer differ between
-    'leaves'/'rows'/packed engines."""
+    'leaves'/'rows'/packed engines.
+
+    elastic=True additionally carries a buf_live peer-liveness mask
+    (DESIGN.md §8), initialized to ZEROS: for a fresh start the step-based
+    staleness guard closes the same first rounds anyway, and for an
+    elastic restore the zeros ARE the join window — every peer's buffered
+    payload reads as dropped until one full exchange completes on the new
+    worker set."""
     if cfg.partial_mode == "rows":
         blk = slice_rows(params, jnp.int32(0), cfg.partial_blocks)
         buf = jax.tree.map(jnp.zeros_like, blk)
     else:
         buf = jax.tree.map(jnp.zeros_like, params)
-    return GossipState(buf=buf, buf_idx=jnp.int32(0), step=jnp.int32(0))
+    live = None
+    if elastic:
+        W = jax.tree.leaves(params)[0].shape[0]
+        live = jnp.zeros((W,), jnp.float32)
+    return GossipState(buf=buf, buf_idx=jnp.int32(0), step=jnp.int32(0),
+                       buf_live=live)
 
 
 def _blend(w_blk, ext_blk, g_blk, gate, acfg: ASGDConfig):
@@ -416,7 +506,7 @@ def _blend(w_blk, ext_blk, g_blk, gate, acfg: ASGDConfig):
 # ---------------------------------------------------------------------------
 
 def asgd_gossip_apply(params, grads, state: GossipState, key,
-                      cfg: GossipConfig, acfg: ASGDConfig):
+                      cfg: GossipConfig, acfg: ASGDConfig, live=None):
     """One SPMD ASGD round: local SGD step + gossip blend (paper eqs. 4-7).
 
     Args:
@@ -424,15 +514,23 @@ def asgd_gossip_apply(params, grads, state: GossipState, key,
       grads:  matching pytree — local mini-batch steps Delta_M per group.
       state:  GossipState staleness buffer.
       key:    per-step PRNG key (shift + partition randomness).
+      live:   optional (W,) f32 0/1 per-peer liveness (DESIGN.md §8);
+        needs an elastic-initialized state.  Dead workers freeze (their
+        Delta_M is masked), their payloads are dropped on the wire, and
+        every gate touching a dead sender or receiver is closed.
 
     Returns (new_params, new_state, metrics); metrics carries the paper's
     'good messages' gate stats (Fig. 12).
     """
     W = jax.tree.leaves(params)[0].shape[0]
+    live = _resolve_live(state.buf_live is not None, live, W,
+                         "asgd_gossip_apply")
     if acfg.silent:
         new_params = jax.tree.map(
-            lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
-        state = GossipState(state.buf, state.buf_idx, state.step + 1)
+            lambda w, g: w - acfg.eps * g.astype(w.dtype), params,
+            mask_live_tree(grads, live))
+        state = GossipState(state.buf, state.buf_idx, state.step + 1,
+                            state.buf_live)
         return new_params, state, {
             "gate": jnp.zeros((W,), jnp.float32), "n_good": jnp.float32(0.0)}
 
@@ -444,20 +542,24 @@ def asgd_gossip_apply(params, grads, state: GossipState, key,
     apply = _apply_rows if cfg.partial_mode == "rows" else _apply_leaves
 
     if cfg.gossip_every <= 1:
-        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg)
+        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg,
+                     live=live)
 
     # interval mode: skip communication entirely on off-steps (lax.cond —
     # XLA compiles the collective branch with static channel ids; only the
     # taken branch executes)
     def gossip_branch(args):
         params, grads, state = args
-        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg)
+        return apply(params, grads, state, shift_idx, block_idx, cfg, acfg,
+                     live=live)
 
     def silent_branch(args):
         params, grads, state = args
         new_params = jax.tree.map(
-            lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
-        new_state = GossipState(state.buf, state.buf_idx, state.step + 1)
+            lambda w, g: w - acfg.eps * g.astype(w.dtype), params,
+            mask_live_tree(grads, live))
+        new_state = GossipState(state.buf, state.buf_idx, state.step + 1,
+                                state.buf_live)
         zero = jnp.zeros((W,), jnp.float32)
         return new_params, new_state, {"gate": zero,
                                        "n_good": jnp.float32(0.0)}
@@ -537,28 +639,39 @@ def _fused_blend(params, grads, ext, cfg, acfg, groups=None, ext_idx=None,
     return unpack_w(out3, spec), gates[:, 0]
 
 
-def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
+def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg,
+                  live=None):
     groups = leaf_groups(params, cfg.partial_blocks)
     sent = exchange_leaves(params, groups, shift_idx, block_idx, cfg)
+    sent_live = None
+    if live is not None:
+        # drop dead payloads on the wire (eq. 3: all-zero == no message)
+        # and freeze dead workers' local steps
+        sent_live = roll_live(live, shift_idx, cfg)
+        sent = mask_live_tree(sent, sent_live)
+        grads = mask_live_tree(grads, live)
 
     if cfg.delay == 0:
         ext, ext_idx, valid = sent, block_idx, None
+        ext_live = sent_live
     else:
         # single-slot buffer: the effective staleness is 1 round whatever
         # cfg.delay claims, so the guard clamps to depth 1 (delay >= 2
         # FIFOs exist only on the packed engines)
         ext, ext_idx = state.buf, state.buf_idx
         valid = staleness_valid(state.step, cfg, depth=1)
+        ext_live = state.buf_live
+    gate_scale = combine_gate_scale(valid, ext_live, live)
 
     if acfg.use_fused:
         new_params, gate = _fused_blend(
             params, grads, ext, cfg, acfg, groups, ext_idx,
-            gate_scale=valid)
+            gate_scale=gate_scale)
     else:
         # Parzen gate (eq. 4) restricted to the buffered partition's leaves
         gate = _gossip_gate(params, grads, ext, acfg, groups, ext_idx)
-        if valid is not None:
-            gate = gate * valid
+        if gate_scale is not None:
+            gate = gate * gate_scale
 
         def upd(w, g, e, gi):
             in_group = (gi == ext_idx)  # traced bool scalar, static group id
@@ -569,34 +682,43 @@ def _apply_leaves(params, grads, state, shift_idx, block_idx, cfg, acfg):
 
         new_params = jax.tree.map(upd, params, grads, ext, groups)
     new_state = GossipState(buf=sent, buf_idx=block_idx,
-                            step=state.step + 1)
+                            step=state.step + 1, buf_live=sent_live)
     return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
 
 
-def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
+def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg,
+                live=None):
     p = cfg.partial_blocks
     my_block = slice_rows(params, block_idx, p)
     # sender-side wire round-trip BEFORE the roll — same site semantics as
     # 'leaves' mode (_roll_group), so the staleness buffer stores
     # carrier-dtype round-tripped values in both modes
     sent = exchange_rows(wire_roundtrip(my_block, cfg), shift_idx, cfg)
+    sent_live = None
+    if live is not None:
+        sent_live = roll_live(live, shift_idx, cfg)
+        sent = mask_live_tree(sent, sent_live)
+        grads = mask_live_tree(grads, live)
 
     if cfg.delay == 0:
         ext, ext_idx, valid = sent, block_idx, None
+        ext_live = sent_live
     else:
         # single-slot buffer -> guard depth 1 (see _apply_leaves)
         ext, ext_idx = state.buf, state.buf_idx
         valid = staleness_valid(state.step, cfg, depth=1)
+        ext_live = state.buf_live
+    gate_scale = combine_gate_scale(valid, ext_live, live)
 
     local_blk = slice_rows(params, ext_idx, p)
     grads_blk = slice_rows(grads, ext_idx, p)
     if acfg.use_fused:
         blended, gate = _fused_blend(local_blk, grads_blk, ext, cfg, acfg,
-                                     gate_scale=valid)
+                                     gate_scale=gate_scale)
     else:
         gate = _gossip_gate(local_blk, grads_blk, ext, acfg)
-        if valid is not None:
-            gate = gate * valid
+        if gate_scale is not None:
+            gate = gate * gate_scale
         blended = jax.tree.map(
             lambda w, e, g: _blend(w, e, g, gate, acfg),
             local_blk, ext, grads_blk)
@@ -604,7 +726,7 @@ def _apply_rows(params, grads, state, shift_idx, block_idx, cfg, acfg):
         lambda w, g: w - acfg.eps * g.astype(w.dtype), params, grads)
     new_params = update_rows(new_params, blended, ext_idx, p)
     new_state = GossipState(buf=sent, buf_idx=block_idx,
-                            step=state.step + 1)
+                            step=state.step + 1, buf_live=sent_live)
     return new_params, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
 
 
@@ -634,15 +756,22 @@ class PackedGossipState:
       dequantized pytree layout).
     buf_idx: which partition index buf holds ((D,) stacked).
     step: round counter.
+    buf_live: per-peer liveness of each buffered payload's worker rows,
+      (W,) f32 0/1 ((D, W) stacked, aligned with buf) — None unless the
+      state was initialized with elastic=True (DESIGN.md §8).  Transient
+      like buf_scales: a restored state re-enters the join window at
+      zeros.
     """
 
     buf: Any
     buf_idx: jnp.ndarray
     step: jnp.ndarray
     buf_scales: Any = None
+    buf_live: Any = None
 
     def tree_flatten(self):
-        return (self.buf, self.buf_idx, self.step, self.buf_scales), None
+        return (self.buf, self.buf_idx, self.step, self.buf_scales,
+                self.buf_live), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -663,7 +792,8 @@ def fifo_depth(cfg: GossipConfig, *, pipelined: bool = False) -> int:
 
 def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
                              block_rows: int | None = None,
-                             depth: int | None = None
+                             depth: int | None = None,
+                             elastic: bool = False
                              ) -> PackedGossipState:
     """Zero packed staleness buffer (paper eq. 3: all-zero == 'no message
     yet' — exact on packed rows: padding is zero too; the first ``depth``
@@ -674,11 +804,18 @@ def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
 
     depth: staleness-FIFO slots (default ``fifo_depth(cfg)``): 1 keeps
     the single-slot layout; >= 2 stacks buf (D, W, R, LANE),
-    buf_idx (D,), buf_scales (D, W, nb) — oldest payload first."""
+    buf_idx (D,), buf_scales (D, W, nb) — oldest payload first.
+
+    elastic=True carries the buf_live peer-liveness mask (DESIGN.md §8),
+    zero-initialized: every buffered slot reads as dropped until real
+    exchanges refill the FIFO — the join window of a fresh start or an
+    elastic restore onto a new worker count."""
     if depth is None:
         depth = fifo_depth(cfg) if cfg is not None else 1
     lead = () if depth == 1 else (depth,)
     idx = jnp.zeros(lead, jnp.int32) if lead else jnp.int32(0)
+    live = (jnp.zeros(lead + (packed.shape[0],), jnp.float32)
+            if elastic else None)
     if cfg is not None and resolved_wire_format(cfg) == "int8":
         if block_rows is None:
             raise ValueError(
@@ -689,49 +826,56 @@ def init_packed_gossip_state(packed, cfg: GossipConfig | None = None,
         return PackedGossipState(
             buf=jnp.zeros(lead + packed.shape, jnp.int8),
             buf_scales=jnp.zeros(lead + (packed.shape[0], nb), jnp.float32),
-            buf_idx=idx, step=jnp.int32(0))
+            buf_idx=idx, step=jnp.int32(0), buf_live=live)
     return PackedGossipState(buf=jnp.zeros(lead + packed.shape,
                                            packed.dtype),
-                             buf_idx=idx, step=jnp.int32(0))
+                             buf_idx=idx, step=jnp.int32(0), buf_live=live)
 
 
 def init_pipelined_gossip_state(packed, cfg: GossipConfig,
-                                block_rows: int | None = None
+                                block_rows: int | None = None,
+                                elastic: bool = False
                                 ) -> PackedGossipState:
     """Staleness FIFO for the pipelined engine (DESIGN.md §7): depth
     ``cfg.delay + 1`` — the in-flight payload plus ``delay`` buffered
     rounds."""
     return init_packed_gossip_state(
         packed, cfg, block_rows=block_rows,
-        depth=fifo_depth(cfg, pipelined=True))
+        depth=fifo_depth(cfg, pipelined=True), elastic=elastic)
 
 
 def _fifo_head(state: PackedGossipState, stacked: bool):
-    """(ext, ext_scales, ext_idx) — the OLDEST buffered payload."""
+    """(ext, ext_scales, ext_idx, ext_live) — the OLDEST buffered
+    payload."""
     if not stacked:
-        return state.buf, state.buf_scales, state.buf_idx
+        return state.buf, state.buf_scales, state.buf_idx, state.buf_live
     scales = None if state.buf_scales is None else state.buf_scales[0]
-    return state.buf[0], scales, state.buf_idx[0]
+    live = None if state.buf_live is None else state.buf_live[0]
+    return state.buf[0], scales, state.buf_idx[0], live
 
 
-def _silent_round(packed, pgrads, state: PackedGossipState, step_lr):
+def _silent_round(packed, pgrads, state: PackedGossipState, step_lr,
+                  live=None):
     """Shared silent-round body of the packed engines (ASGDConfig.silent
     and the gossip_every off-rounds): plain local SGD step, buffers
     untouched, step bumped, zero gate metrics — ONE implementation so the
-    engines the parity tests compare cannot drift."""
+    engines the parity tests compare cannot drift.  ``live`` masks the
+    local steps of dead workers (they freeze through silent rounds too)."""
     new_state = PackedGossipState(buf=state.buf, buf_scales=state.buf_scales,
-                                  buf_idx=state.buf_idx, step=state.step + 1)
+                                  buf_idx=state.buf_idx, step=state.step + 1,
+                                  buf_live=state.buf_live)
     zero = jnp.zeros((packed.shape[0],), jnp.float32)
-    return packed - step_lr * pgrads, new_state, {
+    return packed - step_lr * mask_live_rows(pgrads, live), new_state, {
         "gate": zero, "n_good": jnp.float32(0.0)}
 
 
 def _fifo_push(state: PackedGossipState, sent, sent_scales, block_idx,
-               stacked: bool) -> PackedGossipState:
+               stacked: bool, sent_live=None) -> PackedGossipState:
     """Drop the oldest payload, append the just-launched one, bump step."""
     if not stacked:
         return PackedGossipState(buf=sent, buf_scales=sent_scales,
-                                 buf_idx=block_idx, step=state.step + 1)
+                                 buf_idx=block_idx, step=state.step + 1,
+                                 buf_live=sent_live)
     buf = jnp.concatenate([state.buf[1:], sent[None]], axis=0)
     idx = jnp.concatenate(
         [state.buf_idx[1:], jnp.asarray(block_idx, jnp.int32)[None]])
@@ -739,8 +883,12 @@ def _fifo_push(state: PackedGossipState, sent, sent_scales, block_idx,
     if sent_scales is not None:
         scales = jnp.concatenate([state.buf_scales[1:], sent_scales[None]],
                                  axis=0)
+    live = None
+    if sent_live is not None:
+        live = jnp.concatenate([state.buf_live[1:], sent_live[None]],
+                               axis=0)
     return PackedGossipState(buf=buf, buf_scales=scales, buf_idx=idx,
-                             step=state.step + 1)
+                             step=state.step + 1, buf_live=live)
 
 
 def packed_row_ranges(spec, cfg: GossipConfig) -> tuple:
@@ -860,7 +1008,8 @@ def exchange_packed(packed, ranges, shift_idx, block_idx, cfg: GossipConfig,
 
 
 def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
-                             cfg: GossipConfig, acfg: ASGDConfig, spec):
+                             cfg: GossipConfig, acfg: ASGDConfig, spec,
+                             live=None):
     """One packed-resident SPMD ASGD round (paper eqs. 4-7).
 
     The packed ``(W, R, LANE)`` ensemble (core/packing.py pack_w on a
@@ -891,12 +1040,16 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
       key:   per-step PRNG key — same draw structure as asgd_gossip_apply,
         so a packed run follows the identical gossip schedule.
       spec:  the WPackSpec the ensemble was packed with (static).
+      live:  optional (W,) f32 0/1 per-peer liveness (DESIGN.md §8);
+        needs an elastic-initialized state.
 
     Returns (new_packed, new_state, metrics) with the same metrics contract
     as asgd_gossip_apply.
     """
+    live = _resolve_live(state.buf_live is not None, live, packed.shape[0],
+                         "asgd_gossip_apply_packed")
     if acfg.silent:
-        return _silent_round(packed, pgrads, state, acfg.eps)
+        return _silent_round(packed, pgrads, state, acfg.eps, live=live)
 
     p = cfg.partial_blocks
     wire = resolved_wire_format(cfg)
@@ -918,13 +1071,20 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
             sent = exchange_packed(packed, ranges, shift_idx, block_idx,
                                    cfg)
             sent_scales = None
+        sent_live = None
+        if live is not None:
+            sent_live = roll_live(live, shift_idx, cfg)
+            sent = mask_live_rows(sent, sent_live)
+            if sent_scales is not None:
+                sent_scales = mask_live_rows(sent_scales, sent_live)
+            pgrads = mask_live_rows(pgrads, live)
         if cfg.delay == 0:
             ext, ext_scales, ext_idx = sent, sent_scales, block_idx
-            valid = None
+            valid, ext_live = None, sent_live
         else:
             # delay >= 2 pops the FIFO head (the payload launched ``delay``
             # rounds ago); delay == 1 keeps the historical single slot
-            ext, ext_scales, ext_idx = _fifo_head(state, stacked)
+            ext, ext_scales, ext_idx, ext_live = _fifo_head(state, stacked)
             valid = staleness_valid(state.step, cfg)
         row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
         new_packed, gates = gossip_blend_w_resident(
@@ -932,10 +1092,11 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
             ext_scales=None if ext_scales is None else ext_scales[:, None],
             use_parzen=acfg.use_parzen, elastic=acfg.elastic,
             elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-            psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+            psum_axes=cfg.gate_psum_axes or None,
+            gate_scale=combine_gate_scale(valid, ext_live, live))
         gate = gates[:, 0]
         new_state = _fifo_push(state, sent, sent_scales, block_idx,
-                               stacked)
+                               stacked, sent_live=sent_live)
         return new_packed, new_state, {"gate": gate,
                                        "n_good": jnp.sum(gate)}
 
@@ -944,7 +1105,7 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
 
     def silent_branch(args):
         packed, pgrads, state = args
-        return _silent_round(packed, pgrads, state, acfg.eps)
+        return _silent_round(packed, pgrads, state, acfg.eps, live=live)
 
     return jax.lax.cond(
         state.step % cfg.gossip_every == 0,
@@ -959,7 +1120,8 @@ def asgd_gossip_apply_packed(packed, pgrads, state: PackedGossipState, key,
 # at delay+1: same key schedule, same exchange, same kernel.
 # ---------------------------------------------------------------------------
 
-def initiate_exchange_packed(packed, key, cfg: GossipConfig, spec):
+def initiate_exchange_packed(packed, key, cfg: GossipConfig, spec,
+                             live=None):
     """The INITIATE half of the pipelined round: draw this round's
     (shift, partition) pair and launch the payload from the CURRENT
     (pre-blend) ensemble.
@@ -969,7 +1131,10 @@ def initiate_exchange_packed(packed, key, cfg: GossipConfig, spec):
     forward/backward (launch/steps.py pipelined step), the collective runs
     concurrently with the compute and its product is consumed only by the
     NEXT round's blend.  Returns (sent, sent_scales, block_idx);
-    sent_scales is None except under wire_format="int8"."""
+    sent_scales is None except under wire_format="int8".  With ``live``
+    given (elastic mode, DESIGN.md §8) the payload rows of dead senders/
+    receivers are dropped on the wire and a fourth element ``sent_live``
+    (W,) records the launch-time validity for the consume half."""
     k_shift, k_blk = jax.random.split(key)
     shift_idx = jax.random.randint(k_shift, (), 0, len(cfg.shifts))
     block_idx = jax.random.randint(k_blk, (), 0, cfg.partial_blocks)
@@ -981,12 +1146,19 @@ def initiate_exchange_packed(packed, key, cfg: GossipConfig, spec):
     else:
         sent = exchange_packed(packed, ranges, shift_idx, block_idx, cfg)
         sent_scales = None
-    return sent, sent_scales, block_idx
+    if live is None:
+        return sent, sent_scales, block_idx
+    sent_live = roll_live(jnp.asarray(live, jnp.float32), shift_idx, cfg)
+    sent = mask_live_rows(sent, sent_live)
+    if sent_scales is not None:
+        sent_scales = mask_live_rows(sent_scales, sent_live)
+    return sent, sent_scales, block_idx, sent_live
 
 
 def consume_exchange_packed(packed, pgrads, state: PackedGossipState, sent,
                             sent_scales, block_idx, cfg: GossipConfig,
-                            acfg: ASGDConfig, spec, lr=None):
+                            acfg: ASGDConfig, spec, lr=None,
+                            sent_live=None, live=None):
     """The CONSUME half of the pipelined round: blend the FIFO head — the
     payload launched ``cfg.delay + 1`` rounds ago — with the eq.-1 local
     update fused in-register (the resident kernel's runtime ``lr``
@@ -995,12 +1167,22 @@ def consume_exchange_packed(packed, pgrads, state: PackedGossipState, sent,
     The blend never touches ``sent`` (this round's launch), so the
     collective that produced it sits entirely off the blend's critical
     path.  The first delay+1 rounds blend placeholder slots and are closed
-    by the staleness guard (staleness_valid extra=1).  Returns
-    (new_packed, new_state, metrics) with the engine metrics contract."""
+    by the staleness guard (staleness_valid extra=1).  In elastic mode
+    ``sent_live`` is the launch-time validity from initiate_exchange_packed
+    (defaults to all-alive on an elastic state) and ``live`` this round's
+    liveness; the FIFO head's recorded validity and the current mask both
+    close the gates.  Returns (new_packed, new_state, metrics) with the
+    engine metrics contract."""
     from ..kernels.gossip_blend import gossip_blend_w_resident
 
+    live = _resolve_live(state.buf_live is not None, live, packed.shape[0],
+                         "consume_exchange_packed")
+    if live is not None:
+        if sent_live is None:
+            sent_live = jnp.ones((packed.shape[0],), jnp.float32)
+        pgrads = mask_live_rows(pgrads, live)
     stacked = fifo_depth(cfg, pipelined=True) >= 2
-    ext, ext_scales, ext_idx = _fifo_head(state, stacked)
+    ext, ext_scales, ext_idx, ext_live = _fifo_head(state, stacked)
     valid = staleness_valid(state.step, cfg, extra=1)
     ranges = packed_row_ranges(spec, cfg)
     row_range = jnp.asarray(ranges, jnp.int32)[ext_idx]
@@ -1009,15 +1191,17 @@ def consume_exchange_packed(packed, pgrads, state: PackedGossipState, sent,
         ext_scales=None if ext_scales is None else ext_scales[:, None],
         use_parzen=acfg.use_parzen, elastic=acfg.elastic,
         elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-        psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+        psum_axes=cfg.gate_psum_axes or None,
+        gate_scale=combine_gate_scale(valid, ext_live, live))
     gate = gates[:, 0]
-    new_state = _fifo_push(state, sent, sent_scales, block_idx, stacked)
+    new_state = _fifo_push(state, sent, sent_scales, block_idx, stacked,
+                           sent_live=sent_live)
     return new_packed, new_state, {"gate": gate, "n_good": jnp.sum(gate)}
 
 
 def asgd_gossip_apply_pipelined(packed, pgrads, state: PackedGossipState,
                                 key, cfg: GossipConfig, acfg: ASGDConfig,
-                                spec, lr=None):
+                                spec, lr=None, live=None):
     """One PIPELINED packed-resident ASGD round (DESIGN.md §7).
 
     initiate_exchange_packed + consume_exchange_packed composed — the
@@ -1034,26 +1218,35 @@ def asgd_gossip_apply_pipelined(packed, pgrads, state: PackedGossipState,
     kernels/gossip_blend/ref.py run_pipelined_parity).  ``state`` comes
     from init_pipelined_gossip_state.  ``lr`` optionally overrides the
     fused eq.-1 step size (a traced schedule value; the Parzen gate keeps
-    acfg.eps).
+    acfg.eps).  ``live`` is the per-peer liveness mask (DESIGN.md §8;
+    needs an elastic-initialized state).
     """
     step_lr = acfg.eps if lr is None else lr
+    live = _resolve_live(state.buf_live is not None, live, packed.shape[0],
+                         "asgd_gossip_apply_pipelined")
     if acfg.silent:
-        return _silent_round(packed, pgrads, state, step_lr)
+        return _silent_round(packed, pgrads, state, step_lr, live=live)
 
     def gossip_branch(args):
         packed, pgrads, state = args
-        sent, sent_scales, block_idx = initiate_exchange_packed(
-            packed, key, cfg, spec)
+        if live is None:
+            sent, sent_scales, block_idx = initiate_exchange_packed(
+                packed, key, cfg, spec)
+            sent_live = None
+        else:
+            sent, sent_scales, block_idx, sent_live = \
+                initiate_exchange_packed(packed, key, cfg, spec, live=live)
         return consume_exchange_packed(packed, pgrads, state, sent,
                                        sent_scales, block_idx, cfg, acfg,
-                                       spec, lr=lr)
+                                       spec, lr=lr, sent_live=sent_live,
+                                       live=live)
 
     if cfg.gossip_every <= 1:
         return gossip_branch((packed, pgrads, state))
 
     def silent_branch(args):
         packed, pgrads, state = args
-        return _silent_round(packed, pgrads, state, step_lr)
+        return _silent_round(packed, pgrads, state, step_lr, live=live)
 
     return jax.lax.cond(
         state.step % cfg.gossip_every == 0,

@@ -341,6 +341,33 @@ def fake_quant_rows(blk, block_rows: int):
     return dequantize_rows(q, scales, block_rows)
 
 
+def resize_worker_axis(tree, w_new: int):
+    """Re-seat a leading-worker-axis pytree (or array) onto ``w_new``
+    workers — the elastic checkpoint migration primitive (DESIGN.md §8).
+
+    Shrinking keeps the first ``w_new`` replicas; growing tiles the
+    existing replicas cyclically (new worker ``w`` adopts replica
+    ``w % w_old``), so every new worker starts from a real trained model
+    and the worker mean (eq. 6 / final_average) is only reweighted, never
+    polluted by synthetic states.  Works on any array with a leading
+    worker axis — param leaves, packed (W, R, LANE) ensembles, packed
+    moments — and maps over pytrees.
+    """
+    if w_new < 1:
+        raise ValueError(f"resize_worker_axis: w_new={w_new} < 1")
+
+    def f(x):
+        w_old = x.shape[0]
+        if w_old == w_new:
+            return x
+        if w_new < w_old:
+            return x[:w_new]
+        reps = -(-w_new // w_old)
+        return jnp.concatenate([x] * reps, axis=0)[:w_new]
+
+    return jax.tree.map(f, tree)
+
+
 def group_ranges_array(spec: WPackSpec):
     """The static ``group_row_ranges`` table as a (p, 2) int32 device array —
     indexed with the traced partition id to produce the (2,) row-range the

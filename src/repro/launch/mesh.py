@@ -216,12 +216,16 @@ def _exchange_switch(packed, shift_idx, block_idx, *, cfg, spec, ranges,
 
 
 def _region_blend(packed, pgrads, ext, ext_scales, ext_idx, step, *, cfg,
-                  acfg, spec, ranges_arr, extra=0, depth=None, lr=None):
+                  acfg, spec, ranges_arr, extra=0, depth=None, lr=None,
+                  lives=()):
     """The resident-kernel blend inside a manual region, with the
     step-based staleness guard (``extra=1`` selects the pipelined
     delay+1 threshold; ``depth`` overrides for single-slot callers) and
-    the fused eq.-1 ``lr`` operand."""
-    from ..core.gossip import staleness_valid
+    the fused eq.-1 ``lr`` operand.  ``lives`` are per-peer liveness
+    vectors (DESIGN.md §8 — the buffered payload's recorded validity and
+    this round's mask, each the local (W_local,) slice) folded into the
+    same gate_scale operand as the scalar guard."""
+    from ..core.gossip import combine_gate_scale, staleness_valid
     from ..kernels.gossip_blend import gossip_blend_w_resident
 
     valid = staleness_valid(step, cfg, extra=extra, depth=depth)
@@ -230,11 +234,22 @@ def _region_blend(packed, pgrads, ext, ext_scales, ext_idx, step, *, cfg,
         ext_scales=None if ext_scales is None else ext_scales[:, None],
         use_parzen=acfg.use_parzen, elastic=acfg.elastic,
         elastic_alpha=acfg.elastic_alpha, block_rows=spec.block_rows,
-        psum_axes=cfg.gate_psum_axes or None, gate_scale=valid)
+        psum_axes=cfg.gate_psum_axes or None,
+        gate_scale=combine_gate_scale(valid, *lives))
     return new_packed, gates[:, 0]
 
 
-def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
+def _roll_live_manual(live, shift_idx, cfg, roll):
+    """sent_live inside a manual region: the (W_local,) liveness slice
+    travels the SAME static-shift switch + ppermute transport as the
+    payload (the 1-D case of _roll_workers_manual), times the receiver's
+    own liveness — core.gossip.roll_live with the manual-region roll."""
+    branches = [(lambda l, s=s: roll(l, s) * l) for s in cfg.shifts]
+    return jax.lax.switch(shift_idx, branches, live)
+
+
+def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None,
+                           elastic: bool = False):
     """The whole packed-resident gossip round — exchange AND blend — in one
     shard_map manual region (DESIGN.md §6).
 
@@ -267,9 +282,18 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
     spec: group-contiguous WPackSpec (core/packing.py); cfg/acfg:
     GossipConfig/ASGDConfig; n_workers: global worker count (defaults to
     the mesh's data-shard count — W_local == 1).
+
+    elastic=True (DESIGN.md §8) appends two split ``(W,)`` operands —
+    ``buf_live`` (the buffered payload's recorded validity) and ``live``
+    (this round's per-peer mask) — and one extra split output
+    ``sent_live``: a masked ppermute payload arrives as eq.-3 zeros and
+    its gate is closed, so the receiving shard DROPS it rather than
+    blending it.
     """
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
+
+    from ..core.gossip import mask_live_rows
 
     axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
         mesh, spec, cfg, n_workers)
@@ -283,42 +307,75 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
                                 spec=spec, ranges=ranges, wire=wire,
                                 roll=roll)
 
-    def blend(packed, pgrads, ext, ext_scales, ext_idx, step):
+    def blend(packed, pgrads, ext, ext_scales, ext_idx, step, lives=()):
         # the round's buf argument is a SINGLE received block (the caller
         # feeds last round's sent back in), so the guard clamps to depth
         # 1 whatever cfg.delay claims — see staleness_valid
         return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
                              step, cfg=cfg, acfg=acfg, spec=spec,
                              ranges_arr=ranges_arr,
-                             depth=min(cfg.delay, 1))
+                             depth=min(cfg.delay, 1), lives=lives)
 
     if wire == "int8":
         def round_fn(packed, pgrads, buf, buf_scales, buf_idx, step,
-                     shift_idx, block_idx):
+                     shift_idx, block_idx, *elastic_args):
             sent, sent_scales = exchange(packed, shift_idx, block_idx)
+            lives, sent_live = (), None
+            if elastic:
+                buf_live, live = elastic_args
+                sent_live = _roll_live_manual(live, shift_idx, cfg, roll)
+                sent = mask_live_rows(sent, sent_live)
+                sent_scales = mask_live_rows(sent_scales, sent_live)
+                pgrads = mask_live_rows(pgrads, live)
             if cfg.delay == 0:
                 ext, ext_scales, ext_idx = sent, sent_scales, block_idx
+                if elastic:
+                    lives = (sent_live, live)
             else:
                 ext, ext_scales, ext_idx = buf, buf_scales, buf_idx
+                if elastic:
+                    lives = (buf_live, live)
             new_packed, gates = blend(packed, pgrads, ext, ext_scales,
-                                      ext_idx, step)
+                                      ext_idx, step, lives)
+            if elastic:
+                return new_packed, sent, sent_scales, gates, sent_live
             return new_packed, sent, sent_scales, gates
 
         n_split_in, n_out = 4, 4
     else:
         def round_fn(packed, pgrads, buf, buf_idx, step, shift_idx,
-                     block_idx):
+                     block_idx, *elastic_args):
             sent = exchange(packed, shift_idx, block_idx)
+            lives, sent_live = (), None
+            if elastic:
+                buf_live, live = elastic_args
+                sent_live = _roll_live_manual(live, shift_idx, cfg, roll)
+                sent = mask_live_rows(sent, sent_live)
+                pgrads = mask_live_rows(pgrads, live)
             if cfg.delay == 0:
                 ext, ext_idx = sent, block_idx
+                if elastic:
+                    lives = (sent_live, live)
             else:
                 ext, ext_idx = buf, buf_idx
+                if elastic:
+                    lives = (buf_live, live)
             new_packed, gates = blend(packed, pgrads, ext, None, ext_idx,
-                                      step)
+                                      step, lives)
+            if elastic:
+                return new_packed, sent, gates, sent_live
             return new_packed, sent, gates
 
         n_split_in, n_out = 3, 3
 
+    if elastic:
+        # buf_live + live ride as trailing split operands; sent_live as a
+        # trailing split output
+        return shard_map(
+            round_fn, mesh=mesh,
+            in_specs=(split,) * n_split_in + (rep,) * 4 + (split,) * 2,
+            out_specs=(split,) * (n_out + 1),
+            check_rep=False)
     return shard_map(
         round_fn, mesh=mesh,
         in_specs=(split,) * n_split_in + (rep,) * 4,
@@ -334,7 +391,8 @@ def shard_map_gossip_round(mesh, spec, cfg, acfg, *, n_workers=None):
 # earlier (the caller-carried FIFO head)
 # ---------------------------------------------------------------------------
 
-def shard_map_initiate_exchange(mesh, spec, cfg, *, n_workers=None):
+def shard_map_initiate_exchange(mesh, spec, cfg, *, n_workers=None,
+                                elastic: bool = False):
     """The INITIATE half as its own manual region: ONLY the partial-row
     ``lax.ppermute`` of this round's payload, launched from the pre-blend
     ensemble.
@@ -344,8 +402,14 @@ def shard_map_initiate_exchange(mesh, spec, cfg, *, n_workers=None):
     ``(sent, sent_scales)`` (int8 wire).  Its inputs are train-step
     program inputs, so placed before the forward/backward the collective
     runs concurrently with it; the product is consumed only by the NEXT
-    round's blend (DESIGN.md §7 timeline)."""
+    round's blend (DESIGN.md §7 timeline).
+
+    elastic=True appends a split ``live`` operand and a trailing
+    ``sent_live`` output: dead peers' payload rows leave the region as
+    eq.-3 zeros (the masked ppermute payload is dropped, DESIGN.md §8)."""
     from jax.experimental.shard_map import shard_map
+
+    from ..core.gossip import mask_live_rows
 
     axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
         mesh, spec, cfg, n_workers)
@@ -353,21 +417,31 @@ def shard_map_initiate_exchange(mesh, spec, cfg, *, n_workers=None):
     def roll(x, s):
         return _roll_workers_manual(x, s, axis_name, n_shards, w_local)
 
-    def initiate(packed, shift_idx, block_idx):
-        return _exchange_switch(packed, shift_idx, block_idx, cfg=cfg,
-                                spec=spec, ranges=ranges, wire=wire,
-                                roll=roll)
+    def initiate(packed, shift_idx, block_idx, *elastic_args):
+        out = _exchange_switch(packed, shift_idx, block_idx, cfg=cfg,
+                               spec=spec, ranges=ranges, wire=wire,
+                               roll=roll)
+        if not elastic:
+            return out
+        (live,) = elastic_args
+        sent_live = _roll_live_manual(live, shift_idx, cfg, roll)
+        if wire == "int8":
+            sent, sent_scales = out
+            return (mask_live_rows(sent, sent_live),
+                    mask_live_rows(sent_scales, sent_live), sent_live)
+        return mask_live_rows(out, sent_live), sent_live
 
-    n_out = 2 if wire == "int8" else 1
+    n_out = (2 if wire == "int8" else 1) + (1 if elastic else 0)
     return shard_map(
         initiate, mesh=mesh,
-        in_specs=(split,) + (rep,) * 2,
+        in_specs=(split,) + (rep,) * 2 + ((split,) if elastic else ()),
         out_specs=(split,) * n_out if n_out > 1 else split,
         check_rep=False)
 
 
 def shard_map_consume_blend(mesh, spec, cfg, acfg, *, n_workers=None,
-                            pipelined: bool = True):
+                            pipelined: bool = True,
+                            elastic: bool = False):
     """The CONSUME half as its own manual region: the resident fused
     blend + eq.-1 update of the FIFO-head payload — COMMUNICATION-FREE
     (the only collective a configuration can add is the tiny
@@ -377,9 +451,15 @@ def shard_map_consume_blend(mesh, spec, cfg, acfg, *, n_workers=None,
     Returns ``consume(packed, pgrads, ext[, ext_scales], ext_idx, step)
     -> (new_packed, gates)``; ``pipelined=True`` (default) applies the
     delay+1 staleness threshold of the pipelined schedule
-    (staleness_valid extra=1)."""
+    (staleness_valid extra=1).  elastic=True appends two split ``(W,)``
+    operands ``ext_live`` (the FIFO head's recorded launch validity) and
+    ``live`` (this round's mask) — both close the gates through the same
+    gate_scale path as the scalar guard, and dead workers' local steps
+    are masked (DESIGN.md §8)."""
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
+
+    from ..core.gossip import mask_live_rows
 
     _, _, _, ranges, wire, split, rep = _region_ctx(mesh, spec, cfg,
                                                     n_workers)
@@ -387,26 +467,41 @@ def shard_map_consume_blend(mesh, spec, cfg, acfg, *, n_workers=None,
     extra = 1 if pipelined else 0
 
     if wire == "int8":
-        def consume(packed, pgrads, ext, ext_scales, ext_idx, step):
+        def consume(packed, pgrads, ext, ext_scales, ext_idx, step,
+                    *elastic_args):
+            lives = ()
+            if elastic:
+                ext_live, live = elastic_args
+                lives = (ext_live, live)
+                pgrads = mask_live_rows(pgrads, live)
             return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
                                  step, cfg=cfg, acfg=acfg, spec=spec,
-                                 ranges_arr=ranges_arr, extra=extra)
+                                 ranges_arr=ranges_arr, extra=extra,
+                                 lives=lives)
         n_split_in = 4   # packed, pgrads, ext, ext_scales
     else:
-        def consume(packed, pgrads, ext, ext_idx, step):
+        def consume(packed, pgrads, ext, ext_idx, step, *elastic_args):
+            lives = ()
+            if elastic:
+                ext_live, live = elastic_args
+                lives = (ext_live, live)
+                pgrads = mask_live_rows(pgrads, live)
             return _region_blend(packed, pgrads, ext, None, ext_idx, step,
                                  cfg=cfg, acfg=acfg, spec=spec,
-                                 ranges_arr=ranges_arr, extra=extra)
+                                 ranges_arr=ranges_arr, extra=extra,
+                                 lives=lives)
         n_split_in = 3   # packed, pgrads, ext
 
     return shard_map(
         consume, mesh=mesh,
-        in_specs=(split,) * n_split_in + (rep,) * 2,  # ext_idx, step
+        in_specs=(split,) * n_split_in + (rep,) * 2
+        + ((split,) * 2 if elastic else ()),  # ext_idx, step[, lives]
         out_specs=(split, split),
         check_rep=False)
 
 
-def shard_map_pipelined_round(mesh, spec, cfg, acfg, *, n_workers=None):
+def shard_map_pipelined_round(mesh, spec, cfg, acfg, *, n_workers=None,
+                              elastic: bool = False):
     """The whole PIPELINED round in one manual region (DESIGN.md §7):
     blend the caller-carried FIFO-head payload ``ext`` (launched delay+1
     rounds ago), and launch this round's payload from the PRE-blend
@@ -423,9 +518,17 @@ def shard_map_pipelined_round(mesh, spec, cfg, acfg, *, n_workers=None):
     The FIFO pop/push lives with the caller (the GSPMD engine
     core/gossip.py asgd_gossip_apply_pipelined is the in-jit formulation
     of the identical round; parity is asserted in
-    tests/test_gossip_pipelined.py on 8 fake devices)."""
+    tests/test_gossip_pipelined.py on 8 fake devices).
+
+    elastic=True (DESIGN.md §8) appends two split ``(W,)`` operands —
+    ``ext_live`` (the consumed payload's recorded launch validity) and
+    ``live`` (this round's mask) — and a trailing split output
+    ``sent_live`` recording the validity of the payload launched this
+    round."""
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
+
+    from ..core.gossip import mask_live_rows
 
     axis_name, n_shards, w_local, ranges, wire, split, rep = _region_ctx(
         mesh, spec, cfg, n_workers)
@@ -439,30 +542,55 @@ def shard_map_pipelined_round(mesh, spec, cfg, acfg, *, n_workers=None):
                                 spec=spec, ranges=ranges, wire=wire,
                                 roll=roll)
 
-    def blend(packed, pgrads, ext, ext_scales, ext_idx, step):
+    def blend(packed, pgrads, ext, ext_scales, ext_idx, step, lives=()):
         return _region_blend(packed, pgrads, ext, ext_scales, ext_idx,
                              step, cfg=cfg, acfg=acfg, spec=spec,
-                             ranges_arr=ranges_arr, extra=1)
+                             ranges_arr=ranges_arr, extra=1, lives=lives)
 
     if wire == "int8":
         def round_fn(packed, pgrads, ext, ext_scales, ext_idx, step,
-                     shift_idx, block_idx):
+                     shift_idx, block_idx, *elastic_args):
+            lives, sent_live = (), None
+            if elastic:
+                ext_live, live = elastic_args
+                lives = (ext_live, live)
+                pgrads = mask_live_rows(pgrads, live)
             new_packed, gates = blend(packed, pgrads, ext, ext_scales,
-                                      ext_idx, step)
+                                      ext_idx, step, lives)
             sent, sent_scales = exchange(packed, shift_idx, block_idx)
+            if elastic:
+                sent_live = _roll_live_manual(live, shift_idx, cfg, roll)
+                sent = mask_live_rows(sent, sent_live)
+                sent_scales = mask_live_rows(sent_scales, sent_live)
+                return new_packed, sent, sent_scales, gates, sent_live
             return new_packed, sent, sent_scales, gates
 
         n_split_in, n_out = 4, 4
     else:
         def round_fn(packed, pgrads, ext, ext_idx, step, shift_idx,
-                     block_idx):
+                     block_idx, *elastic_args):
+            lives, sent_live = (), None
+            if elastic:
+                ext_live, live = elastic_args
+                lives = (ext_live, live)
+                pgrads = mask_live_rows(pgrads, live)
             new_packed, gates = blend(packed, pgrads, ext, None, ext_idx,
-                                      step)
+                                      step, lives)
             sent = exchange(packed, shift_idx, block_idx)
+            if elastic:
+                sent_live = _roll_live_manual(live, shift_idx, cfg, roll)
+                sent = mask_live_rows(sent, sent_live)
+                return new_packed, sent, gates, sent_live
             return new_packed, sent, gates
 
         n_split_in, n_out = 3, 3
 
+    if elastic:
+        return shard_map(
+            round_fn, mesh=mesh,
+            in_specs=(split,) * n_split_in + (rep,) * 4 + (split,) * 2,
+            out_specs=(split,) * (n_out + 1),
+            check_rep=False)
     return shard_map(
         round_fn, mesh=mesh,
         in_specs=(split,) * n_split_in + (rep,) * 4,

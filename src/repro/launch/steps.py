@@ -251,8 +251,8 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                     gcfg: GossipConfig | None = None,
                     acfg: ASGDConfig | None = None, remat=True,
                     spmd_axes=None, packed_resident=False, pack_spec=None,
-                    pipelined=False):
-    """Returns step(params, gossip, opt_state, batch, key)
+                    pipelined=False, lr_schedule=None):
+    """Returns step(params, gossip, opt_state, batch, key[, live])
             -> (params, gossip, opt_state, metrics).
 
     algo: 'asgd' (paper) | 'silent' (SimuParallelSGD) | 'sync' (BATCH).
@@ -292,6 +292,16 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
     gradient is BORN packed — the per-round pack_w(grads) full-state copy
     of the unpipelined packed step disappears (bitwise the same values:
     the VJP of the unpack views IS pack_w).
+
+    Elastic liveness (DESIGN.md §8): every returned step accepts an
+    optional trailing ``live`` (W,) 0/1 mask — requires a gossip state
+    initialized with elastic=True and algo='asgd'.  Dead workers freeze
+    (masked update direction), their payloads drop on the wire, and the
+    FIFO slots they filled gate out of the eq.-6 mean via the existing
+    gate_scale path.  lr_schedule (pipelined engine only): a callable
+    ``step -> lr`` (optim.optimizers.lr_schedule) evaluated each round
+    on the gossip step counter and fed to the consume blend's per-round
+    lr operand; None keeps the static acfg.eps.
     """
     from ..optim import (adam_update, momentum_update)
 
@@ -314,6 +324,11 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                 "initiate/consume step has no off-round branch; use "
                 "core.gossip.asgd_gossip_apply_pipelined for interval "
                 "gossip)")
+    if lr_schedule is not None and not pipelined:
+        raise ValueError(
+            "lr_schedule= is only wired into the pipelined engine "
+            "(pipelined=True): its consume step takes a per-round lr "
+            "operand; the other engines read the static acfg.eps")
 
     def per_worker_loss(p, b):
         return M.loss_fn(cfg, p, b, remat=remat)
@@ -336,7 +351,11 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
         dw = jax.tree.map(lambda w, n: (w - n) / acfg.eps, params, new_p)
         return dw, new_s
 
-    def step(params, gossip, opt_state, batch, key):
+    def step(params, gossip, opt_state, batch, key, live=None):
+        if live is not None and algo != "asgd":
+            raise ValueError(
+                f"live= (peer liveness, DESIGN.md §8) requires algo='asgd' "
+                f"(got {algo!r}): sync/silent carry no gossip state to gate")
         loss, grads = jax.vmap(jax.value_and_grad(per_worker_loss),
                                **vmap_kw)(params, batch)
         dw, opt_state = direction(params, grads, opt_state)
@@ -350,7 +369,7 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
             metrics = {"loss": jnp.mean(loss)}
         else:
             new_params, new_gossip, gm = asgd_gossip_apply(
-                params, dw, gossip, key, gcfg, acfg)
+                params, dw, gossip, key, gcfg, acfg, live=live)
             metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
                        "gate": gm["gate"]}
         return new_params, new_gossip, opt_state, metrics
@@ -366,13 +385,20 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                                    initiate_exchange_packed)
         from ..core.packing import unpack_rows
 
-        def pipelined_step(packed, gossip, opt_state, batch, key):
+        def pipelined_step(packed, gossip, opt_state, batch, key, live=None):
+            lr = None if lr_schedule is None else lr_schedule(gossip.step)
             # 1. INITIATE: launch this round's payload from the program
             #    input — the ppermute shares no dependency with the
             #    forward/backward below, so it runs concurrently with it
             if not acfg.silent:
-                sent, sent_scales, block_idx = initiate_exchange_packed(
-                    packed, key, gcfg, pack_spec)
+                if live is None:
+                    sent, sent_scales, block_idx = initiate_exchange_packed(
+                        packed, key, gcfg, pack_spec)
+                    sent_live = None
+                else:
+                    sent, sent_scales, block_idx, sent_live = \
+                        initiate_exchange_packed(packed, key, gcfg,
+                                                 pack_spec, live=live)
 
             # 2. forward/backward, differentiated w.r.t. the PACKED rows:
             #    the unpack views fuse into the consumers and the VJP
@@ -388,7 +414,8 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
                 # SimuParallelSGD ablation: pure local step, nothing on
                 # the wire, FIFO untouched — the shared silent-round body
                 new_packed, new_gossip, gm = _silent_round(
-                    packed, dw, gossip, acfg.eps)
+                    packed, dw, gossip, acfg.eps if lr is None else lr,
+                    live=live)
                 metrics = {"loss": jnp.mean(loss), **gm}
                 return new_packed, new_gossip, opt_state, metrics
 
@@ -396,14 +423,18 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
             #    launched delay+1 rounds ago; push this round's launch
             new_packed, new_gossip, gm = consume_exchange_packed(
                 packed, dw, gossip, sent, sent_scales, block_idx, gcfg,
-                acfg, pack_spec)
+                acfg, pack_spec, lr=lr, sent_live=sent_live, live=live)
             metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
                        "gate": gm["gate"]}
             return new_packed, new_gossip, opt_state, metrics
 
         return pipelined_step
 
-    def packed_step(packed, gossip, opt_state, batch, key):
+    def packed_step(packed, gossip, opt_state, batch, key, live=None):
+        if live is not None and algo != "asgd":
+            raise ValueError(
+                f"live= (peer liveness, DESIGN.md §8) requires algo='asgd' "
+                f"(got {algo!r}): sync/silent carry no gossip state to gate")
         params = unpack_w(packed, pack_spec)   # views of the resident buf
         loss, grads = jax.vmap(jax.value_and_grad(per_worker_loss),
                                **vmap_kw)(params, batch)
@@ -421,7 +452,7 @@ def make_train_step(cfg: ModelConfig, *, algo="asgd", inner="sgd",
             metrics = {"loss": jnp.mean(loss)}
         else:
             new_packed, new_gossip, gm = asgd_gossip_apply_packed(
-                packed, pdw, gossip, key, gcfg, acfg, pack_spec)
+                packed, pdw, gossip, key, gcfg, acfg, pack_spec, live=live)
             metrics = {"loss": jnp.mean(loss), "n_good": gm["n_good"],
                        "gate": gm["gate"]}
         return new_packed, new_gossip, opt_state, metrics

@@ -66,7 +66,22 @@ def main(argv=None):
                          "dequantizes in-register); 'bf16'/'f16' cast the "
                          "payload dtype; 'none' sends the carrier dtype")
     ap.add_argument("--elastic", action="store_true",
-                    help="beyond-paper elastic blending")
+                    help="fault-tolerant elastic mode (DESIGN.md §8): the "
+                         "gossip state carries a per-peer liveness mask, "
+                         "and --restore accepts a checkpoint saved at a "
+                         "DIFFERENT --workers count (leaves re-seated onto "
+                         "this run's W and re-packed; liveness gates stay "
+                         "closed for the join window)")
+    ap.add_argument("--elastic-blend", action="store_true",
+                    help="beyond-paper elastic (EASGD-style) blending")
+    ap.add_argument("--lr-schedule", default="none",
+                    choices=["none", "const", "cosine", "linear"],
+                    help="per-round lr schedule on the gossip step counter "
+                         "(optim.lr_schedule; --pipelined only — the "
+                         "consume blend takes a per-round lr operand); "
+                         "'none' keeps the static --eps")
+    ap.add_argument("--warmup", type=int, default=100,
+                    help="lr-schedule warmup rounds")
     ap.add_argument("--packed-resident", action="store_true",
                     help="carry the packed (W, R, LANE) ensemble across "
                          "steps (DESIGN.md §6): gossip exchange + blend on "
@@ -110,11 +125,21 @@ def main(argv=None):
         shifts=tuple(s for s in (1, 2, 4, 8) if s < max(W, 2)),
         partial_blocks=args.partial_blocks, delay=args.delay,
         wire_format=wire_format, payload_dtype=payload_dtype)
-    acfg = ASGDConfig(eps=args.eps, elastic=args.elastic)
+    acfg = ASGDConfig(eps=args.eps, elastic=args.elastic_blend)
     from .steps import init_inner_state
     spec = None
     if args.pipelined:
         args.packed_resident = True
+    if args.elastic and args.algo != "asgd":
+        ap.error("--elastic requires --algo asgd (liveness gates live in "
+                 "the gossip state)")
+    if args.lr_schedule != "none" and not args.pipelined:
+        ap.error("--lr-schedule requires --pipelined")
+    schedule = None
+    if args.lr_schedule != "none":
+        from ..optim import lr_schedule as _mk_sched
+        schedule = _mk_sched(args.lr_schedule, args.eps,
+                             warmup=args.warmup, total=args.steps)
     if args.packed_resident:
         # pack ONCE at init; the ensemble stays packed until checkpoint /
         # final-aggregate boundaries (DESIGN.md §6)
@@ -128,30 +153,40 @@ def main(argv=None):
             # pipelined FIFO (depth delay+1) + packed-shaped inner-
             # optimizer state: the gradient is born packed (DESIGN.md §7)
             gossip0 = init_pipelined_gossip_state(packed, gcfg,
-                                                  block_rows=wire_br)
+                                                  block_rows=wire_br,
+                                                  elastic=args.elastic)
             opt0 = init_inner_state(packed, args.inner)
         else:
             gossip0 = init_packed_gossip_state(packed, gcfg,
-                                               block_rows=wire_br)
+                                               block_rows=wire_br,
+                                               elastic=args.elastic)
             opt0 = init_inner_state(wparams, args.inner)
         state = {"params": packed, "gossip": gossip0, "opt": opt0,
                  "step": jnp.int32(0)}
         if args.restore:
-            state = load_checkpoint_packed(args.restore, state, spec)
+            state = load_checkpoint_packed(args.restore, state, spec,
+                                           elastic=args.elastic)
             print(f"restored step={int(state['step'])} "
-                  f"from {args.restore} (re-packed)")
+                  f"from {args.restore} (re-packed"
+                  f"{', elastic' if args.elastic else ''})")
     else:
-        state = {"params": wparams, "gossip": init_gossip_state(wparams, gcfg),
+        state = {"params": wparams,
+                 "gossip": init_gossip_state(wparams, gcfg,
+                                             elastic=args.elastic),
                  "opt": init_inner_state(wparams, args.inner),
                  "step": jnp.int32(0)}
         if args.restore:
-            state = load_checkpoint(args.restore, state)
+            state = load_checkpoint(args.restore, state,
+                                    resize_workers=args.elastic)
             print(f"restored step={int(state['step'])} from {args.restore}")
 
     step_fn = jax.jit(make_train_step(
         cfg, algo=args.algo, gcfg=gcfg, acfg=acfg, inner=args.inner,
         packed_resident=args.packed_resident, pack_spec=spec,
-        pipelined=args.pipelined))
+        pipelined=args.pipelined, lr_schedule=schedule))
+    # the CLI trainer drives a fully-live fleet; a launcher that detects
+    # real churn would flip entries of this mask per round (DESIGN.md §8)
+    live_args = ((jnp.ones((W,), jnp.float32),) if args.elastic else ())
     its = [lm_batch_iterator(
         args.seed * 1000 + w, args.batch, args.seq, cfg.vocab,
         frontend=cfg.frontend, d_model=cfg.d_model,
@@ -169,7 +204,7 @@ def main(argv=None):
         batch = next_wbatch()
         state["params"], state["gossip"], state["opt"], metrics = step_fn(
             state["params"], state["gossip"], state["opt"], batch,
-            jax.random.fold_in(key, step))
+            jax.random.fold_in(key, step), *live_args)
         state["step"] = jnp.int32(step + 1)
         losses.append(float(metrics["loss"]))
         if step % args.log_every == 0 or step == args.steps - 1:
@@ -185,9 +220,13 @@ def main(argv=None):
     final_params = (unpack_w(state["params"], spec)
                     if args.packed_resident else state["params"])
     avg = final_average(final_params)
-    first_loss = losses[-1]
-    print(f"final: last-loss={first_loss:.4f} "
-          f"(start {losses[0]:.4f})", flush=True)
+    if losses:
+        print(f"final: last-loss={losses[-1]:.4f} "
+              f"(start {losses[0]:.4f})", flush=True)
+    else:
+        # restored step >= --steps: nothing to run, still save/exit clean
+        print(f"final: no steps run (restored step "
+              f"{int(state['step'])} >= --steps {args.steps})", flush=True)
     if args.save:
         if args.packed_resident:
             save_checkpoint_packed(args.save, state, spec)

@@ -375,6 +375,91 @@ class TestPackedCheckpoint:
             np.testing.assert_allclose(np.asarray(plain["params"][k]),
                                        np.asarray(params[k]), rtol=1e-6)
 
+    @pytest.mark.parametrize("w_new", [2, 8])
+    def test_elastic_worker_count_migration(self, tmp_path, w_new):
+        """A packed checkpoint saved at W=4 restores at W=2 / W=8 via
+        load_checkpoint_packed(elastic=True): the unpacked pytree of the
+        restored ensemble equals resize_worker_axis of the saved
+        canonical tree FLOAT-EXACTLY (shrink slices the leading axis,
+        grow tiles it cyclically; the per-worker row layout is
+        W-invariant, so only the worker axis moves), the step counter
+        survives, and the restored state keeps the elastic init's zero
+        liveness mask — every worker re-enters through the join window
+        (DESIGN.md §8)."""
+        from repro.checkpoint import (load_checkpoint_packed,
+                                      save_checkpoint_packed)
+        from repro.core.packing import resize_worker_axis
+
+        W, p = 4, 2
+        params = make_params(W=W)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=p)
+        spec = pack_spec_w(params, block_rows=2,
+                           groups=leaf_groups(params, p), n_groups=p)
+        packed = pack_w(params, spec)
+        gossip = init_packed_gossip_state(packed)
+        ranges = packed_row_ranges(spec, gcfg)
+        gossip.buf = exchange_packed(packed, ranges, jnp.int32(0),
+                                     jnp.int32(1), gcfg)
+        state = {"params": packed, "gossip": gossip, "opt": jnp.int32(0),
+                 "step": jnp.int32(3)}
+        path = tmp_path / "w4.msgpack"
+        save_checkpoint_packed(path, state, spec)
+
+        params_new = make_params(W=w_new)   # same per-worker shapes
+        spec_new = pack_spec_w(params_new, block_rows=2,
+                               groups=leaf_groups(params_new, p),
+                               n_groups=p)
+        packed_new = pack_w(params_new, spec_new)
+        like = {"params": jnp.zeros_like(packed_new),
+                "gossip": init_packed_gossip_state(packed_new,
+                                                   elastic=True),
+                "opt": jnp.int32(0), "step": jnp.int32(0)}
+        back = load_checkpoint_packed(path, like, spec_new, elastic=True)
+
+        got = unpack_w(back["params"], spec_new)
+        want = resize_worker_axis(params, w_new)
+        for k in params:
+            assert got[k].shape[0] == w_new
+            np.testing.assert_array_equal(np.asarray(got[k]),
+                                          np.asarray(want[k]))
+        got_buf = unpack_w(back["gossip"].buf, spec_new)
+        want_buf = resize_worker_axis(unpack_w(gossip.buf, spec), w_new)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(got_buf[k]),
+                                          np.asarray(want_buf[k]))
+        assert int(back["step"]) == 3
+        np.testing.assert_array_equal(
+            np.asarray(back["gossip"].buf_live),
+            np.zeros((w_new,), np.float32))
+
+    def test_non_elastic_restore_rejects_other_worker_count(self,
+                                                            tmp_path):
+        """Without elastic=True a worker-count mismatch stays a loud
+        error — the migration path is opt-in."""
+        from repro.checkpoint import (load_checkpoint_packed,
+                                      save_checkpoint_packed)
+
+        params = make_params(W=4)
+        p = 2
+        spec = pack_spec_w(params, block_rows=2,
+                           groups=leaf_groups(params, p), n_groups=p)
+        packed = pack_w(params, spec)
+        state = {"params": packed,
+                 "gossip": init_packed_gossip_state(packed),
+                 "opt": jnp.int32(0), "step": jnp.int32(1)}
+        path = tmp_path / "w4.msgpack"
+        save_checkpoint_packed(path, state, spec)
+
+        params2 = make_params(W=2)
+        spec2 = pack_spec_w(params2, block_rows=2,
+                            groups=leaf_groups(params2, p), n_groups=p)
+        packed2 = pack_w(params2, spec2)
+        like = {"params": packed2,
+                "gossip": init_packed_gossip_state(packed2),
+                "opt": jnp.int32(0), "step": jnp.int32(0)}
+        with pytest.raises(ValueError, match="shape mismatch"):
+            load_checkpoint_packed(path, like, spec2)
+
 
 class TestPackedTrainStep:
     @pytest.mark.slow

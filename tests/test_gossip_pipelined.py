@@ -541,6 +541,11 @@ class TestPackedInputSpecs:
             make_train_step(cfg, packed_resident=True, pack_spec=spec,
                             pipelined=True,
                             gcfg=GossipConfig(gossip_every=2))
+        with pytest.raises(ValueError, match="lr_schedule"):
+            make_train_step(cfg, lr_schedule=lambda s: jnp.float32(0.01))
+        with pytest.raises(ValueError, match="lr_schedule"):
+            make_train_step(cfg, packed_resident=True, pack_spec=spec,
+                            lr_schedule=lambda s: jnp.float32(0.01))
 
 
 class TestUnpackRows:
@@ -657,6 +662,76 @@ class TestPipelinedTrainStep:
         np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_a),
                                    rtol=1e-6, atol=1e-7)
 
+    @pytest.mark.slow
+    def test_lr_schedule_const_matches_fixed_lr(self):
+        """make_train_step(lr_schedule=...) feeds the consume blend's
+        runtime lr operand: a constant schedule reproduces the fixed-lr
+        pipelined run BITWISE.  (optim.lr_schedule('const') carries a
+        warmup ramp — lr=0 at step 0 — so the bitwise reference is a
+        plain constant lambda, not kind='const'.)"""
+        import dataclasses as dc
+
+        from repro.configs.registry import get_arch
+        from repro.launch.steps import init_inner_state, make_train_step
+        from repro.models import model as M
+
+        cfg = get_arch("smollm-135m").reduced()
+        W, B, S = 2, 1, 16
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (W,) + x.shape).copy(),
+            M.init_model(cfg, jax.random.key(0)))
+        batch = {"tokens": jax.random.randint(jax.random.key(1),
+                                              (W, B, S), 0, cfg.vocab)}
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=2, delay=0)
+        acfg = ASGDConfig(eps=0.01, use_parzen=False)
+        spec = pack_spec_w(params, block_rows=8,
+                           groups=leaf_groups(params, 2), n_groups=2)
+        kw = dict(algo="asgd", gcfg=gcfg, acfg=acfg,
+                  packed_resident=True, pack_spec=spec, pipelined=True)
+        step_fix = make_train_step(cfg, **kw)
+        step_sch = make_train_step(
+            cfg, lr_schedule=lambda s: jnp.float32(acfg.eps), **kw)
+        packed = pack_w(params, spec)
+        opt = init_inner_state(packed)
+        pk_f = pk_s = packed
+        g_f = init_pipelined_gossip_state(packed, gcfg)
+        g_s = init_pipelined_gossip_state(packed, gcfg)
+        for i in range(3):
+            key = jax.random.key(i)
+            pk_f, g_f, _, m_f = step_fix(pk_f, g_f, opt, batch, key)
+            pk_s, g_s, _, m_s = step_sch(pk_s, g_s, opt, batch, key)
+            np.testing.assert_array_equal(np.asarray(pk_s),
+                                          np.asarray(pk_f))
+            np.testing.assert_array_equal(np.asarray(g_s.buf),
+                                          np.asarray(g_f.buf))
+            np.testing.assert_array_equal(np.asarray(m_s["gate"]),
+                                          np.asarray(m_f["gate"]))
+        # a real (warmup-ramped) schedule must CHANGE the trajectory —
+        # the operand is live, not folded away
+        from repro.optim import lr_schedule as mk_sched
+        step_ramp = make_train_step(
+            cfg, lr_schedule=mk_sched("cosine", acfg.eps, warmup=2,
+                                      total=6), **kw)
+        g_r = init_pipelined_gossip_state(packed, gcfg)
+        pk_r, _, _, _ = step_ramp(packed, g_r, opt, batch,
+                                  jax.random.key(0))
+        assert not np.array_equal(np.asarray(pk_r), np.asarray(pk_f))
+
+        # silent ablation honors the schedule too (step_lr = lr)
+        step_sil_s = make_train_step(
+            cfg, lr_schedule=lambda s: jnp.float32(acfg.eps),
+            **{**kw, "acfg": dc.replace(acfg, silent=True)})
+        step_sil_f = make_train_step(
+            cfg, **{**kw, "acfg": dc.replace(acfg, silent=True)})
+        g0 = init_pipelined_gossip_state(packed, gcfg)
+        out_a, _, _, _ = step_sil_s(packed, g0, opt, batch,
+                                    jax.random.key(0))
+        g0 = init_pipelined_gossip_state(packed, gcfg)
+        out_b, _, _, _ = step_sil_f(packed, g0, opt, batch,
+                                    jax.random.key(0))
+        np.testing.assert_array_equal(np.asarray(out_a),
+                                      np.asarray(out_b))
+
 
 PIPELINED_MESH_SCRIPT = textwrap.dedent("""
     import os
@@ -701,7 +776,8 @@ PIPELINED_MESH_SCRIPT = textwrap.dedent("""
             pk, pdw, st, sent_ref, ss_ref, bi_ref, gcfg, acfg, spec)
         # manual-region pipelined round must reproduce it exactly
         stacked = fifo_depth(gcfg, pipelined=True) >= 2
-        ext, ext_s, ext_idx = _fifo_head(st, stacked)
+        ext, ext_s, ext_idx, ext_live = _fifo_head(st, stacked)
+        assert ext_live is None   # non-elastic state carries no mask
         k_shift, k_blk = jax.random.split(key)
         si = jax.random.randint(k_shift, (), 0, len(gcfg.shifts))
         bi = jax.random.randint(k_blk, (), 0, 2)

@@ -107,6 +107,115 @@ class TestExchangeProperties:
                 out[k], params[k] - 0.1 * gm[k][None], rtol=1e-5)
 
 
+class TestLivenessMaskProperties:
+    """DESIGN.md §8 liveness-gate invariants on the pytree engine
+    (elastic=True state + per-round live mask)."""
+
+    @given(st.integers(1, 4), st.integers(0, 1), st.integers(0, 100))
+    @settings(max_examples=12, deadline=None)
+    def test_dead_peer_window_is_exact(self, k, delay, seed):
+        """A peer dead for k rounds contributes ZERO to the eq.-6 mean of
+        its receiver for exactly k consecutive blend rounds, offset by
+        the staleness delay (payloads launched before death still blend —
+        sent_live is recorded at LAUNCH; payloads launched while dead
+        stay gated for `delay` rounds after revival).  The window is
+        exact on both edges, and monotone in k by construction."""
+        W, dead, t0, rounds = 4, 1, 4, 14
+        receiver = (dead + 1) % W    # shifts=(1,): r hears from r-1
+        params = _params(seed % 50, W=W)
+        grads = jax.tree.map(lambda x: 0.02 * jnp.tanh(x), params)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=1, delay=delay)
+        acfg = ASGDConfig(eps=0.05, use_parzen=False)
+        state = init_gossip_state(params, gcfg, elastic=True)
+        p = params
+        gates = []
+        for t in range(rounds):
+            live = np.ones(W, np.float32)
+            if t0 <= t < t0 + k:
+                live[dead] = 0.0
+            p, state, m = asgd_gossip_apply(
+                p, grads, state, jax.random.key(t), gcfg, acfg,
+                live=jnp.asarray(live))
+            gates.append(np.asarray(m["gate"], np.float32))
+        gates = np.stack(gates)   # (rounds, W)
+        for t in range(rounds):
+            want_closed = (t < delay                        # warm-up
+                           or t0 + delay <= t < t0 + k + delay)
+            assert (gates[t, receiver] == 0.0) == want_closed, (
+                f"round {t}: receiver gate {gates[t, receiver]} "
+                f"(expected closed={want_closed}, k={k}, delay={delay})")
+
+    @given(st.integers(1, 3), st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_dead_peer_is_frozen_and_revives(self, k, seed):
+        """While dead, a peer's own parameters are BITWISE frozen (masked
+        grads + fully closed blend); after revival it moves again."""
+        W, dead, t0 = 4, 2, 3
+        params = _params(seed % 20, W=W)
+        grads = jax.tree.map(lambda x: 0.05 * jnp.sign(x), params)
+        gcfg = GossipConfig(shifts=(1,), partial_blocks=1, delay=0)
+        acfg = ASGDConfig(eps=0.05, use_parzen=False)
+        state = init_gossip_state(params, gcfg, elastic=True)
+        p = params
+        for t in range(t0 + k + 1):
+            live = np.ones(W, np.float32)
+            if t0 <= t < t0 + k:
+                live[dead] = 0.0
+            prev = p
+            p, state, _ = asgd_gossip_apply(
+                p, grads, state, jax.random.key(t), gcfg, acfg,
+                live=jnp.asarray(live))
+            for key in p:
+                row_same = np.array_equal(np.asarray(p[key][dead]),
+                                          np.asarray(prev[key][dead]))
+                assert row_same == (t0 <= t < t0 + k)
+
+
+class TestInt8WireProperties:
+    """quantize_rows / dequantize_rows error bounds (satellite of the
+    elastic PR: the int8 wire rides inside the masked exchange)."""
+
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]),
+           st.floats(1e-3, 1e3))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_error_bounded_by_half_step(self, seed, br, scale):
+        """|dequant(quant(x)) - x| <= absmax_tile / 254 per tile (half a
+        quantization step), at any magnitude."""
+        from repro.core.packing import (LANE, dequantize_rows,
+                                        quantize_rows)
+        W, rows = 3, 8
+        x = scale * jax.random.normal(jax.random.key(seed % 9973),
+                                      (W, rows, LANE))
+        q, scales = quantize_rows(x, br)
+        back = dequantize_rows(q, scales, br)
+        nb = rows // br
+        t = np.asarray(x, np.float32).reshape(W, nb, br * LANE)
+        bt = np.asarray(back, np.float32).reshape(W, nb, br * LANE)
+        absmax = np.abs(t).max(axis=-1)
+        err = np.abs(bt - t).max(axis=-1)
+        bound = absmax / 254.0 * (1 + 1e-5) + 1e-30
+        assert (err <= bound).all(), (err / np.maximum(absmax, 1e-30)).max()
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_zero_tiles_survive_exactly(self, seed):
+        """An all-zero tile gets scale 0 and round-trips to EXACT zeros —
+        the eq.-3 'all-zero == no message' invariant survives the wire,
+        which is what lets a masked (dead-peer) payload stay 'no
+        message' after int8 quantization."""
+        from repro.core.packing import (LANE, dequantize_rows,
+                                        quantize_rows)
+        W, rows, br = 2, 6, 2
+        x = jax.random.normal(jax.random.key(seed), (W, rows, LANE))
+        x = x.at[:, 2:4].set(0.0)     # one zero tile per worker
+        q, scales = quantize_rows(x, br)
+        back = dequantize_rows(q, scales, br)
+        assert float(jnp.abs(q[:, 2:4]).max()) == 0.0
+        assert float(jnp.abs(back[:, 2:4]).max()) == 0.0
+        np.testing.assert_array_equal(np.asarray(scales[:, 1]),
+                                      np.zeros(W, np.float32))
+
+
 class TestGossipConvergence:
     def test_workers_contract_with_aligned_descent(self):
         """Long-run: workers descending the same quadratic with gossip end
